@@ -1,0 +1,74 @@
+"""Paper Figures 15-16 (headline): maximum goodput (max QPS with >= 90%
+SLO attainment) for chatbot (ShareGPT-like) and summarization
+(ArXiv-like) under two balanced SLO variants.
+
+Claim C4: TaiChi beats PD aggregation (paper: +9..47%) and PD
+disaggregation (paper: +29..77%) under balanced SLOs."""
+from benchmarks.common import (MODEL, TP, cost_model, emit, slo_regimes,
+                               timed)
+from repro.core.latency import SLO
+from repro.core.policies import Sliders
+from repro.sim.simulator import ServingConfig, goodput_sweep
+from repro.sim.workload import ARXIV, SHAREGPT
+
+N = 250
+
+
+def _slos(workload):
+    cm = cost_model()
+    base_tpot = cm.decode_iteration_time(32, 1024)
+    prompt = 430 if workload == "sharegpt" else 6000
+    base_ttft = cm.prefill_time(prompt, 2048)
+    # SLO1: lower TTFT, higher TPOT; SLO2: higher TTFT, lower TPOT (§4.1).
+    # TPOT multipliers sit BETWEEN the interference-free decode time and
+    # full-chunk interference level (~1.9x base on v5e) so the regime is
+    # genuinely balanced — the paper's A100 SLOs encode the same choice
+    # relative to its much steeper 0.2 ms/token interference slope.
+    return {"slo1": SLO(ttft=base_ttft * 8, tpot=base_tpot * 1.85),
+            "slo2": SLO(ttft=base_ttft * 14, tpot=base_tpot * 1.45)}
+
+
+def _configs(slo_name):
+    sd = 256 if slo_name == "slo1" else 128   # paper: tighter TPOT -> smaller S_D
+    return {
+        "aggregation": ServingConfig(MODEL, TP, "aggregation",
+                                     Sliders(2, 2, 1024, 1024)),
+        "disaggregation": ServingConfig(MODEL, TP, "disaggregation",
+                                        Sliders(2, 2, 0, 0)),
+        "taichi": ServingConfig(MODEL, TP, "taichi",
+                                Sliders(2, 2, 1024, sd)),
+    }
+
+
+def run():
+    results = {}
+    for wname, wl, grid in [
+        ("chatbot", SHAREGPT, [60, 80, 100, 110, 120, 130, 140]),
+        ("summarization", ARXIV, [2, 3, 4, 5, 6, 7, 8]),
+    ]:
+        slos = _slos(wl.name)
+        for sname, slo in slos.items():
+            for pname, sc in _configs(sname).items():
+                with timed() as t:
+                    g, stats = goodput_sweep(sc, slo, wl, grid, N)
+                results[(wname, sname, pname)] = g
+                att = ";".join(f"q{s.qps:g}:{s.slo_attainment:.2f}"
+                               for s in stats)
+                emit(f"fig1516.{wname}.{sname}.{pname}", t.us,
+                     f"goodput={g};{att}")
+    # C4 checks
+    for wname in ("chatbot", "summarization"):
+        for sname in ("slo1", "slo2"):
+            tai = results[(wname, sname, "taichi")]
+            agg = results[(wname, sname, "aggregation")]
+            dis = results[(wname, sname, "disaggregation")]
+            gain_a = (tai - agg) / agg * 100 if agg else float("inf")
+            gain_d = (tai - dis) / dis * 100 if dis else float("inf")
+            emit(f"fig1516.claim_C4.{wname}.{sname}", 0,
+                 f"taichi={tai};agg={agg};disagg={dis};"
+                 f"gain_vs_agg={gain_a:.0f}%;gain_vs_disagg={gain_d:.0f}%")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Figure 17: P90 tail-latency reduction at TaiChi's maximum
+supported load — TTFT vs disaggregation (paper: 2.4-13.2x) and TPOT vs
+aggregation (paper: 1.11-1.69x)."""
+from benchmarks.common import default_configs, emit, slo_regimes, timed
+from repro.sim.simulator import run_sim
+from repro.sim.workload import SHAREGPT
+
+QPS = 120.0
+N = 300
+
+
+def run():
+    slo = slo_regimes()["balanced"]
+    configs = default_configs()
+    stats = {}
+    for pname, sc in configs.items():
+        with timed() as t:
+            stats[pname] = run_sim(sc, slo, SHAREGPT, QPS, N, seed=4)
+        st = stats[pname]
+        emit(f"fig17.{pname}", t.us,
+             f"p90_ttft={st.p90_ttft:.3f}s;p90_tpot={st.p90_tpot*1e3:.1f}ms")
+    ttft_red = stats["disaggregation"].p90_ttft / stats["taichi"].p90_ttft
+    tpot_red = stats["aggregation"].p90_tpot / stats["taichi"].p90_tpot
+    emit("fig17.claim_C5", 0,
+         f"ttft_reduction_vs_disagg={ttft_red:.2f}x;"
+         f"tpot_reduction_vs_agg={tpot_red:.2f}x;"
+         f"both_gt_1={ttft_red > 1 and tpot_red > 1}")
+    return {"ttft_x": ttft_red, "tpot_x": tpot_red}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Paper Figure 3: mixed-batch execution time vs chunk size (batch 16).
+Larger chunks -> more prefill tokens per iteration -> longer iterations
+(linear-operation time dominates)."""
+from benchmarks.common import cost_model, emit, timed
+
+
+def run():
+    cm = cost_model()
+    out = {}
+    for chunk in [0, 128, 256, 512, 1024, 2048]:
+        with timed() as t:
+            it = cm.decode_iteration_time(16, 1024, chunk_tokens=chunk)
+        out[chunk] = it
+        emit(f"fig3.cp{chunk}", t.us, f"iter_ms={it*1e3:.2f}")
+    mono = all(out[a] <= out[b] + 1e-9
+               for a, b in zip([0, 128, 256, 512, 1024],
+                               [128, 256, 512, 1024, 2048]))
+    emit("fig3.claim_monotone", 0, f"exec_time_increases_with_chunk={mono}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

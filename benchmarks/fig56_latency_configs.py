@@ -1,0 +1,51 @@
+"""Paper Figures 5-6: latency distributions across configurations —
+aggregation chunk-size sweep (CP128..CP2048) and disaggregation PD-ratio
+sweep (P1D3..P3D1) at fixed load.  Shows the TTFT/TPOT trade-off each
+knob navigates (latency shifting across phases, Opportunity 2)."""
+from benchmarks.common import MODEL, TP, emit, slo_regimes, timed
+from repro.core.policies import Sliders
+from repro.sim.simulator import ServingConfig, run_sim
+from repro.sim.workload import ARXIV
+
+# long-prompt workload near prefill saturation: chunk size then governs
+# prefill capacity and the TTFT/TPOT shift is visible (paper ran QPS=12
+# near its cluster's knee for the same reason)
+QPS = 6.5
+N = 150
+
+
+def run():
+    slo = slo_regimes(workload="arxiv")["balanced"]
+    rows = {}
+    # CP128 is omitted: its prefill capacity (~31k tok/s for 4
+    # instances) is below this workload's demand — the simulated queue
+    # diverges, which is the paper's own Fig-5 observation that chunk
+    # sizes below 1024 are "unsustainable for the workload"
+    for chunk in [256, 512, 1024, 2048]:
+        sc = ServingConfig(model=MODEL, tp=TP, policy="aggregation",
+                           sliders=Sliders(2, 2, chunk, chunk))
+        with timed() as t:
+            st = run_sim(sc, slo, ARXIV, QPS, N, seed=2)
+        rows[f"CP{chunk}"] = (st.p90_ttft, st.p90_tpot)
+        emit(f"fig5.CP{chunk}", t.us,
+             f"p90_ttft={st.p90_ttft:.2f}s;p90_tpot={st.p90_tpot*1e3:.1f}ms")
+    for np_ in [1, 2, 3]:
+        sc = ServingConfig(model=MODEL, tp=TP, policy="disaggregation",
+                           sliders=Sliders(np_, 4 - np_, 0, 0))
+        with timed() as t:
+            st = run_sim(sc, slo, ARXIV, QPS, N, seed=2)
+        rows[f"P{np_}D{4-np_}"] = (st.p90_ttft, st.p90_tpot)
+        emit(f"fig6.P{np_}D{4-np_}", t.us,
+             f"p90_ttft={st.p90_ttft:.2f}s;p90_tpot={st.p90_tpot*1e3:.1f}ms")
+    # cross-phase latency shifting: larger chunk lowers TTFT, raises
+    # TPOT (CP256 -> CP1024; beyond that TTFT turns non-monotone, as in
+    # the paper's Fig 6 discussion of extreme configurations)
+    shift = (rows["CP1024"][0] <= rows["CP256"][0]
+             and rows["CP1024"][1] >= rows["CP256"][1])
+    emit("fig5.claim_latency_shift", 0,
+         f"larger_chunk_shifts_ttft_to_tpot={shift}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

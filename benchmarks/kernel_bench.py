@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks (interpret mode on CPU — wall time is NOT
+TPU-representative; the derived column reports the work description and
+FLOPs so the roofline table can relate them to v5e peaks)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels.chunked_prefill_attention.ops import (
+    chunked_prefill_attention)
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    # chunked prefill attention: chunk 128 against 1k prefix
+    B, Tq, Hq, Hkv, D, S = 1, 128, 8, 8, 128, 1152
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Tq, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    us = _time(chunked_prefill_attention, q, k, v, 1024, bq=128, bk=128)
+    flops = 4 * B * Tq * Hq * D * S
+    emit("kernel.chunked_prefill_attention", us,
+         f"interpret=True;flops={flops};shape=B{B}xT{Tq}xH{Hq}xS{S}")
+
+    # decode attention: 32 sequences, 2k cache
+    B, Hq, Hkv, D, S = 32, 8, 2, 128, 2048
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lengths = jnp.full((B,), S, jnp.int32)
+    us = _time(decode_attention, q, k, v, lengths, bk=512)
+    emit("kernel.decode_attention", us,
+         f"interpret=True;flops={4*B*Hq*D*S};shape=B{B}xH{Hq}xS{S}")
+
+    # ssd scan: mamba2-1.3b-like single layer slice
+    b, t, h, p, g, n = 2, 512, 8, 64, 1, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, t, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, t, g, n), jnp.float32)
+    Cm = jax.random.normal(ks[4], (b, t, g, n), jnp.float32)
+    us = _time(ssd_scan, x, dt, A, Bm, Cm, 128, None)
+    emit("kernel.ssd_scan", us,
+         f"interpret=True;chunk=128;shape=b{b}xt{t}xh{h}xp{p}xn{n}")
+
+
+if __name__ == "__main__":
+    run()

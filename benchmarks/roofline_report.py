@@ -1,0 +1,35 @@
+"""Roofline table from the dry-run artifacts (runs/dryrun/*.json):
+per (arch x shape x mesh) the three terms, dominant bottleneck, model-
+flops ratio, and HBM fit."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RUNS = os.path.join(os.path.dirname(__file__), "..", "runs", "dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(RUNS, "*.json")))
+    if not files:
+        emit("roofline.missing", 0,
+             "no dry-run artifacts; run python -m repro.launch.dryrun --all")
+        return {}
+    out = {}
+    for f in files:
+        r = json.load(open(f))
+        rf = r["roofline"]
+        key = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        out[key] = rf
+        emit(f"roofline.{key}", r.get("compile_s", 0) * 1e6,
+             f"compute_s={rf['compute_s']};memory_s={rf['memory_s']};"
+             f"collective_s={rf['collective_s']};dominant={rf['dominant']};"
+             f"useful_ratio={rf['useful_flops_ratio']};"
+             f"peak_GiB={r['peak_bytes_per_device']/2**30:.2f};"
+             f"fits_hbm={rf['fits_hbm']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

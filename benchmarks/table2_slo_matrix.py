@@ -1,0 +1,48 @@
+"""Paper Table 2 / Figure 1-2: SLO attainment of PD aggregation vs
+disaggregation vs TaiChi under the three SLO regimes at fixed load.
+
+Claim C1: agg wins tight-TTFT/relaxed-TPOT; disagg wins tight-TPOT/
+relaxed-TTFT; both collapse under balanced SLOs while TaiChi holds."""
+import dataclasses
+
+from benchmarks.common import (default_configs, emit, slo_regimes,
+                               taichi_sliders_for, timed)
+from repro.sim.simulator import run_sim
+from repro.sim.workload import SHAREGPT
+
+QPS = 110.0
+N = 300
+
+
+def run():
+    regimes = slo_regimes()
+    configs = default_configs()
+    rows = {}
+    for rname, slo in regimes.items():
+        for pname, sc in configs.items():
+            if pname == "taichi":
+                sc = dataclasses.replace(
+                    sc, sliders=taichi_sliders_for(rname))
+            with timed() as t:
+                st = run_sim(sc, slo, SHAREGPT, QPS, N, seed=0)
+            rows[(rname, pname)] = st.slo_attainment
+            emit(f"table2.{rname}.{pname}", t.us,
+                 f"attainment={st.slo_attainment:.3f};"
+                 f"p90_ttft={st.p90_ttft:.2f}s;"
+                 f"p90_tpot={st.p90_tpot*1e3:.1f}ms")
+    # claim checks
+    c1a = rows[("tight_ttft", "aggregation")] > rows[("tight_ttft",
+                                                      "disaggregation")]
+    c1b = rows[("tight_tpot", "disaggregation")] > rows[("tight_tpot",
+                                                         "aggregation")]
+    c1c = (rows[("balanced", "taichi")]
+           >= max(rows[("balanced", "aggregation")],
+                  rows[("balanced", "disaggregation")]))
+    emit("table2.claim_C1", 0,
+         f"agg_wins_tight_ttft={c1a};disagg_wins_tight_tpot={c1b};"
+         f"taichi_wins_balanced={c1c}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

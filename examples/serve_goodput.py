@@ -1,0 +1,44 @@
+"""Goodput comparison (the paper's headline experiment, Figs 15/16) at
+simulator scale: PD aggregation vs PD disaggregation vs TaiChi on the
+ShareGPT-like chatbot workload under a balanced SLO.
+
+  PYTHONPATH=src python examples/serve_goodput.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.latency import SLO
+from repro.core.policies import Sliders
+from repro.sim.simulator import ServingConfig, goodput_sweep
+from repro.sim.workload import SHAREGPT
+
+
+def main():
+    slo = SLO(ttft=1.5, tpot=0.030)
+    grid = [60, 80, 100, 110, 120, 130]
+    configs = {
+        "PD aggregation   ": ServingConfig(
+            policy="aggregation", sliders=Sliders(2, 2, 1024, 1024)),
+        "PD disaggregation": ServingConfig(
+            policy="disaggregation", sliders=Sliders(2, 2, 0, 0)),
+        "TaiChi (hybrid)  ": ServingConfig(
+            policy="taichi", sliders=Sliders(2, 2, 1024, 256)),
+    }
+    print(f"balanced SLO: TTFT<{slo.ttft}s TPOT<{slo.tpot*1e3:.0f}ms; "
+          f"goodput = max QPS with >=90% attainment\n")
+    results = {}
+    for name, sc in configs.items():
+        g, stats = goodput_sweep(sc, slo, SHAREGPT, grid, n_requests=250)
+        results[name] = g
+        curve = "  ".join(f"{s.qps:g}:{s.slo_attainment:.2f}"
+                          for s in stats)
+        print(f"{name} goodput={g:>5g} qps   [{curve}]")
+    tai = results["TaiChi (hybrid)  "]
+    for name, g in results.items():
+        if "TaiChi" not in name and g > 0:
+            print(f"TaiChi vs {name.strip()}: "
+                  f"{(tai - g) / g * 100:+.0f}% goodput")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Cluster orchestration: a discrete-event loop shared by the simulator
+(SimExecutor + estimator time) and the real engine (JaxExecutor + the
+same estimator time base, so scheduling behaves identically while tokens
+are computed for real).
+
+Events: ARRIVAL (proxy routes prefill), ITER (an instance executes one
+mixed batch), TRANSFER (a KV/state migration lands).  Migration latency
+is charged via CostModel.transfer_time — asynchronous, off the critical
+path, as in the paper's vLLM implementation (§3.5).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.estimator import CostModel
+from repro.core.instance import Instance
+from repro.core.latency import SLO, RunStats
+from repro.core.policies import BasePolicy
+from repro.engine.request import Request, State
+
+ARRIVAL, ITER, TRANSFER = 0, 1, 2
+
+
+class Cluster:
+    def __init__(self, policy: BasePolicy, cost: CostModel):
+        self.policy = policy
+        self.cost = cost
+        self.instances = policy.instances
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._iter_scheduled: Dict[int, bool] = {
+            i.iid: False for i in self.instances}
+        self.transfer_count = 0
+        self.transfer_bytes = 0
+        self.backflow_count = 0
+        self.degrade_count = 0
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: int, data):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    def _schedule_iter(self, inst: Instance, t: float):
+        if not self._iter_scheduled[inst.iid]:
+            self._iter_scheduled[inst.iid] = True
+            self._push(max(t, inst.busy_until), ITER, inst.iid)
+
+    def _start_transfer(self, req: Request, src: Instance, dst: Instance,
+                        now: float, kind: str):
+        """kind: 'place' (prefill->decode), 'degrade', or 'backflow'."""
+        state = src.eject(req)
+        req.state = State.MIGRATING
+        req.n_migrations += 1
+        t = self.cost.transfer_time(req.context_len)
+        self.transfer_count += 1
+        self.transfer_bytes += self.cost.state_bytes(req.context_len)
+        self._push(now + t, TRANSFER, (req, dst, state, kind))
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request], until: Optional[float] = None
+            ) -> List[Request]:
+        for r in requests:
+            self._push(r.arrival, ARRIVAL, r)
+        inst_by_id = {i.iid: i for i in self.instances}
+        while self._heap:
+            now, _, kind, data = heapq.heappop(self._heap)
+            if until is not None and now > until:
+                break
+            if kind == ARRIVAL:
+                inst = self.policy.on_arrival(data, now)
+                if inst is None:               # early rejection
+                    data.state = State.REJECTED
+                    data.finish_time = now
+                    continue
+                self._schedule_iter(inst, now)
+            elif kind == TRANSFER:
+                req, dst, state, move_kind = data
+                dst.inject(req, state)
+                if move_kind == "backflow":
+                    req.reset_tpot_window()
+                    self.backflow_count += 1
+                elif move_kind == "degrade":
+                    self.degrade_count += 1
+                self._schedule_iter(dst, now)
+            else:  # ITER
+                inst = inst_by_id[data]
+                self._iter_scheduled[inst.iid] = False
+                dur, prefill_done, _finished = inst.run_iteration(now)
+                end = now + dur
+                for req in prefill_done:
+                    target, needs_transfer = self.policy.on_prefill_done(
+                        req, inst, end)
+                    if needs_transfer:
+                        self._start_transfer(req, inst, target, end, "place")
+                    else:
+                        target.admit_decode(req)
+                        self._schedule_iter(target, end)
+                for (req, src, dst, is_backflow) in (
+                        self.policy.select_migrations(end, inst)):
+                    self._start_transfer(req, src, dst, end,
+                                         "backflow" if is_backflow
+                                         else "degrade")
+                    self._schedule_iter(dst, end)
+                if inst.has_work():
+                    if dur == 0.0:
+                        # nothing schedulable this tick (e.g. oversized
+                        # head-of-line request): back off instead of
+                        # spinning at the same timestamp
+                        self._schedule_iter(inst, end + 0.01)
+                    else:
+                        self._schedule_iter(inst, end)
+        return list(requests)
+
+    # ------------------------------------------------------------------
+    def stats(self, requests, slo: SLO, qps: float) -> RunStats:
+        wall = max((r.finish_time or 0.0) for r in requests)
+        return RunStats(list(requests), slo, qps, wall)

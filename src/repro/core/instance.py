@@ -1,0 +1,232 @@
+"""Serving instance: a TP group running mixed chunked-prefill + decode
+batches (aggregated batch handling).  P-heavy and D-heavy instances are
+*the same class* with different chunk sizes — the paper's point is that
+capability differentiation is purely a chunk-size configuration (§3.1).
+
+The instance owns: a prefill queue (FIFO), the set of decoding requests,
+HBM block accounting, and an executor that actually produces tokens
+(real JAX engine, or the simulator's token oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.estimator import CostModel
+from repro.engine.kvcache import BlockAllocator
+from repro.engine.request import Request, State
+
+P_HEAVY = "P"
+D_HEAVY = "D"
+
+
+@dataclasses.dataclass
+class IterationPlan:
+    prefill_items: List[Tuple[Request, int]]      # (request, chunk tokens)
+    decode_reqs: List[Request]
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(t for _, t in self.prefill_items)
+
+    def empty(self) -> bool:
+        return not self.prefill_items and not self.decode_reqs
+
+
+class Executor(Protocol):
+    """Produces tokens for a planned iteration; returns per-request
+    "finished decoding" flags (EOS) for decode requests."""
+
+    def execute(self, plan: IterationPlan) -> Dict[int, bool]: ...
+
+    def add_request(self, req: Request): ...
+
+    def extract_state(self, req: Request): ...
+
+    def insert_state(self, req: Request, state): ...
+
+    def release(self, req: Request): ...
+
+
+class Instance:
+    def __init__(self, iid: int, itype: str, chunk_size: int,
+                 cost: CostModel, executor: Executor,
+                 hbm_blocks: int = 4096, block_size: int = 16,
+                 max_decode_batch: int = 256):
+        self.iid = iid
+        self.itype = itype
+        self.chunk_size = chunk_size
+        self.cost = cost
+        self.executor = executor
+        self.allocator = BlockAllocator(hbm_blocks, block_size)
+        self.max_decode_batch = max_decode_batch
+
+        self.prefill_queue: deque[Request] = deque()
+        self.decoding: Dict[int, Request] = {}
+        self.pending_decode: deque[Request] = deque()
+        # accounting
+        self.busy_until: float = 0.0
+        self.iterations: int = 0
+        self.prefill_token_count: int = 0
+        self.decode_token_count: int = 0
+        self.interference_log: List[Tuple[int, int]] = []  # (ptk, dtk)
+        self.stalled_decodes: int = 0
+        self.preemptions: int = 0
+
+    # ------------------------------------------------------------------
+    # admission / queues
+    # ------------------------------------------------------------------
+    def enqueue_prefill(self, req: Request):
+        self.prefill_queue.append(req)
+
+    def queued_prefill_tokens(self) -> int:
+        return sum(r.prefill_remaining for r in self.prefill_queue)
+
+    def admit_decode(self, req: Request):
+        """Called by the proxy when this instance is chosen for decode."""
+        self.pending_decode.append(req)
+
+    def hbm_utilization(self) -> float:
+        return self.allocator.utilization()
+
+    def decode_load(self) -> int:
+        """HBM usage proxy for proxy-side load balancing (paper §3.3 ①)."""
+        return self.allocator.used_blocks
+
+    # ------------------------------------------------------------------
+    # iteration
+    # ------------------------------------------------------------------
+    def _try_admit_pending(self):
+        while self.pending_decode and len(self.decoding) < self.max_decode_batch:
+            req = self.pending_decode[0]
+            need = req.context_len + 64           # headroom for growth
+            if not self.allocator.holds(req.rid):
+                if not self.allocator.can_allocate(need):
+                    break
+                self.allocator.allocate(req.rid, need)
+                self.executor.add_request(req)
+            self.pending_decode.popleft()
+            self.decoding[req.rid] = req
+            req.state = State.DECODE
+            req.decode_instance = self.iid
+
+    def build_plan(self) -> IterationPlan:
+        self._try_admit_pending()
+        decode_reqs = []
+        for req in list(self.decoding.values()):
+            if self.allocator.can_extend(req.rid, req.context_len + 1):
+                self.allocator.extend(req.rid, req.context_len + 1)
+                decode_reqs.append(req)
+            else:
+                self.stalled_decodes += 1
+        budget = max(0, self.chunk_size - len(decode_reqs))
+        items: List[Tuple[Request, int]] = []
+        while budget > 0 and self.prefill_queue:
+            head = self.prefill_queue[0]
+            if not self.allocator.holds(head.rid):
+                need = head.prefill_remaining + 64
+                if not self.allocator.can_allocate(need):
+                    break                          # head-of-line blocking
+                self.allocator.allocate(head.rid, need)
+                self.executor.add_request(head)
+            take = min(head.prefill_remaining, budget)
+            items.append((head, take))
+            budget -= take
+            if take == head.prefill_remaining:
+                self.prefill_queue.popleft()
+                head.state = State.PREFILL
+            else:
+                break
+        plan = IterationPlan(items, decode_reqs)
+        if plan.empty() and self.decoding:
+            # memory deadlock: every decode stalled on a block boundary
+            # with zero free blocks.  vLLM-style preemption-by-recompute:
+            # evict the longest-context decode; it re-prefills its whole
+            # context (prompt + generated so far) later.
+            victim = max(self.decoding.values(), key=lambda r: r.context_len)
+            self._preempt(victim)
+            self.preemptions += 1
+            return self.build_plan()
+        return plan
+
+    def _preempt(self, req: Request):
+        self.decoding.pop(req.rid, None)
+        if self.allocator.holds(req.rid):
+            self.allocator.free(req.rid)
+        self.executor.release(req)
+        # recompute: remaining prefill = full context (prompt + generated)
+        req.prefill_pos = -req.output_len
+        req.state = State.QUEUED
+        self.prefill_queue.appendleft(req)
+
+    def iteration_duration(self, plan: IterationPlan) -> float:
+        return self.cost.iteration_time(
+            [(t, r.prefill_pos) for r, t in plan.prefill_items],
+            [r.context_len for r in plan.decode_reqs])
+
+    def run_iteration(self, now: float) -> Tuple[float, List[Request], List[Request]]:
+        """Execute one iteration starting at ``now``.
+
+        Returns (duration, prefill_completed, decode_finished)."""
+        plan = self.build_plan()
+        if plan.empty():
+            return 0.0, [], []
+        dur = self.iteration_duration(plan)
+        end = now + dur
+        eos = self.executor.execute(plan)
+
+        prefill_done: List[Request] = []
+        for req, take in plan.prefill_items:
+            req.prefill_pos += take
+            req.prefill_instance = (self.iid if req.prefill_instance is None
+                                    else req.prefill_instance)
+            self.prefill_token_count += take
+            if req.prefill_remaining == 0:
+                # prefill emits the first token
+                req.record_token(end)
+                prefill_done.append(req)
+
+        finished: List[Request] = []
+        for req in plan.decode_reqs:
+            req.interference_tokens += plan.prefill_tokens
+            req.record_token(end)
+            self.decode_token_count += 1
+            if eos.get(req.rid, False) or req.done():
+                req.state = State.FINISHED
+                req.finish_time = end
+                self.remove_request(req)
+                finished.append(req)
+        self.interference_log.append(
+            (plan.prefill_tokens, len(plan.decode_reqs)))
+        self.iterations += 1
+        self.busy_until = end
+        return dur, prefill_done, finished
+
+    # ------------------------------------------------------------------
+    # migration support (flowing decode)
+    # ------------------------------------------------------------------
+    def remove_request(self, req: Request):
+        self.decoding.pop(req.rid, None)
+        if self.allocator.holds(req.rid):
+            self.allocator.free(req.rid)
+        self.executor.release(req)
+
+    def eject(self, req: Request):
+        """Remove for migration; returns opaque engine state."""
+        state = self.executor.extract_state(req)
+        self.decoding.pop(req.rid, None)
+        if self.allocator.holds(req.rid):
+            self.allocator.free(req.rid)
+        self.executor.release(req)
+        return state
+
+    def inject(self, req: Request, state):
+        """Receive a migrated decode request (allocation happens at
+        admission time via pending queue)."""
+        self.executor.insert_state(req, state)
+        self.pending_decode.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.prefill_queue or self.decoding or
+                    self.pending_decode)

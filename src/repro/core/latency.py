@@ -1,0 +1,85 @@
+"""SLO definitions, attainment, and goodput metrics (paper §2.1, §4.1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.engine.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    ttft: float      # seconds
+    tpot: float      # seconds per output token
+
+    def satisfied(self, req: Request) -> bool:
+        t1 = req.ttft()
+        if t1 is None or t1 > self.ttft:
+            return False
+        tp = req.tpot()
+        if tp is None:           # single-token outputs: only TTFT applies
+            return True
+        return tp <= self.tpot
+
+
+def attainment(reqs: Sequence[Request], slo: SLO) -> float:
+    from repro.engine.request import State
+    done = [r for r in reqs if r.first_token_time is not None
+            or r.state == State.REJECTED]
+    if not done:
+        return 0.0
+    # early-rejected requests count as SLO violations (honest goodput)
+    return sum(slo.satisfied(r) and r.state != State.REJECTED
+               for r in done) / len(done)
+
+
+def p90(xs: Iterable[float]) -> float:
+    xs = [x for x in xs if x is not None]
+    return float(np.percentile(xs, 90)) if xs else float("nan")
+
+
+@dataclasses.dataclass
+class RunStats:
+    reqs: List[Request]
+    slo: SLO
+    qps: float
+    wall: float
+
+    @property
+    def slo_attainment(self) -> float:
+        return attainment(self.reqs, self.slo)
+
+    @property
+    def p90_ttft(self) -> float:
+        return p90([r.ttft() for r in self.reqs])
+
+    @property
+    def p90_tpot(self) -> float:
+        return p90([r.tpot() for r in self.reqs])
+
+    def summary(self) -> dict:
+        return {
+            "qps": self.qps,
+            "n": len(self.reqs),
+            "attainment": round(self.slo_attainment, 4),
+            "p90_ttft_s": round(self.p90_ttft, 3),
+            "p90_tpot_ms": round(self.p90_tpot * 1e3, 2),
+        }
+
+
+def max_goodput(run_at_qps, qps_grid: Sequence[float],
+                target: float = 0.9) -> tuple:
+    """Paper metric: max request rate sustaining >= 90% SLO attainment.
+
+    run_at_qps: callable qps -> RunStats.  Returns (goodput_qps, [RunStats]).
+    """
+    stats = []
+    best = 0.0
+    for q in qps_grid:
+        st = run_at_qps(q)
+        stats.append(st)
+        if st.slo_attainment >= target:
+            best = q
+    return best, stats

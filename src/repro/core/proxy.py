@@ -1,0 +1,103 @@
+"""Length-aware prefill scheduling — Algorithm 2 of the paper (§3.4),
+plus the decode-placement rule of §3.3 step ①.
+
+Prefill routing: for each instance estimate
+    TTFT_hat = Q (queued prefill exec time) + E (this request's exec time)
+             + T (KV transfer, P-heavy only — its decode will move away)
+keep instances with TTFT_hat + elapsed-queue-age < tpft SLO (feasible set),
+pick the feasible instance with the FEWEST queued prefill tokens (this
+preferentially degrades short prefills onto D-heavy instances, while
+falling back to P-heavy when D-heavy queues grow — load balancing).
+If no instance is feasible the request is assigned randomly (the paper
+does the same for fair comparison instead of early rejection [20]).
+
+Decode placement (§3.3 ①): prefilled on D-heavy -> decode in place (zero
+transfer); prefilled on P-heavy -> D-heavy instance with the lowest
+decode load (HBM usage).
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Sequence
+
+from repro.core.estimator import CostModel
+from repro.core.instance import D_HEAVY, Instance, P_HEAVY
+from repro.engine.request import Request
+
+
+class Proxy:
+    def __init__(self, instances: Sequence[Instance], cost: CostModel,
+                 ttft_slo: float, seed: int = 0,
+                 early_rejection: bool = False):
+        """early_rejection: when no instance can meet the TTFT SLO,
+        proactively drop the request (Mooncake-style [20], paper §3.4)
+        instead of randomly assigning it.  The paper disables this for
+        fair comparison with PD aggregation; we expose both behaviors."""
+        self.instances = list(instances)
+        self.cost = cost
+        self.ttft_slo = ttft_slo
+        self._rng = random.Random(seed)
+        self.infeasible_count = 0
+        self.early_rejection = early_rejection
+        self.rejected_count = 0
+
+    # ------------------------------------------------------------------
+    def _queue_time(self, inst: Instance) -> float:
+        """Q: total estimated execution time of queued prefill work."""
+        q = 0.0
+        for r in inst.prefill_queue:
+            q += self.cost.prefill_time(r.prefill_remaining,
+                                        inst.chunk_size,
+                                        decode_batch=len(inst.decoding))
+        return q
+
+    def _exec_time(self, inst: Instance, req: Request) -> float:
+        return self.cost.prefill_time(req.prompt_len, inst.chunk_size,
+                                      decode_batch=len(inst.decoding))
+
+    def _transfer_time(self, inst: Instance, req: Request) -> float:
+        if inst.itype != P_HEAVY:
+            return 0.0
+        return self.cost.transfer_time(req.prompt_len)
+
+    # ------------------------------------------------------------------
+    def schedule_prefill(self, req: Request, now: float) -> Instance:
+        """Algorithm 2."""
+        feasible: List[Instance] = []
+        for inst in self.instances:
+            if inst.chunk_size <= 0:
+                continue                       # pure-decode instance
+            Q = self._queue_time(inst)
+            E = self._exec_time(inst, req)
+            T = self._transfer_time(inst, req)
+            if Q + E + T < self.ttft_slo:
+                feasible.append(inst)
+        if feasible:
+            # fewest queued prefill tokens; ties favor D-heavy (the paper
+            # "typically favors a D-heavy instance" — degradation first)
+            chosen = min(feasible,
+                         key=lambda i: (i.queued_prefill_tokens(),
+                                        0 if i.itype == D_HEAVY else 1))
+        else:
+            self.infeasible_count += 1
+            if self.early_rejection:
+                self.rejected_count += 1
+                return None
+            cands = [i for i in self.instances if i.chunk_size > 0]
+            chosen = self._rng.choice(cands)
+        chosen.enqueue_prefill(req)
+        return chosen
+
+    # ------------------------------------------------------------------
+    def place_decode(self, req: Request, prefill_inst: Instance,
+                     d_instances: Sequence[Instance]) -> Instance:
+        """§3.3 step ①: in-place on D-heavy, else least-loaded D-heavy."""
+        if prefill_inst.itype == D_HEAVY or not d_instances:
+            return prefill_inst
+        return min(d_instances, key=lambda i: i.decode_load())
+
+    def least_loaded(self, itype: str) -> Optional[Instance]:
+        cands = [i for i in self.instances if i.itype == itype]
+        if not cands:
+            return None
+        return min(cands, key=lambda i: i.decode_load())

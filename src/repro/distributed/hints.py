@@ -1,0 +1,76 @@
+"""Optional in-model sharding hints.
+
+The model code is mesh-agnostic; under the production meshes GSPMD
+occasionally picks catastrophic layouts (e.g. sharding the head_dim
+*contraction* of attention scores because the head count doesn't divide
+the model axis, turning the [B,H,T,S] scores into a partial-sum
+all-reduce — observed at 10 GiB per layer-chunk on qwen3 prefill_32k).
+
+``set_hints`` installs axis names; ``constrain`` then pins intermediate
+layouts with lax.with_sharding_constraint (intermediates may pad, unlike
+jit inputs).  With no hints installed (CPU tests, single device) every
+call is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_hints(batch_axes: Optional[Tuple], model_axis: Optional[str],
+              seq_parallel: bool = False):
+    _state.batch = batch_axes
+    _state.model = model_axis
+    _state.seq_parallel = seq_parallel
+
+
+def clear_hints():
+    _state.batch = None
+    _state.model = None
+    _state.seq_parallel = False
+
+
+@contextlib.contextmanager
+def hints(batch_axes, model_axis, seq_parallel: bool = False):
+    set_hints(batch_axes, model_axis, seq_parallel)
+    try:
+        yield
+    finally:
+        clear_hints()
+
+
+def active() -> bool:
+    return getattr(_state, "model", None) is not None
+
+
+def constrain_heads(x, *, batch_first: bool = True):
+    """x: [B, T, H, D] (or [B, S, H, D] KV) -> pin H to the model axis,
+    B to the data axes."""
+    if not active():
+        return x
+    b = _state.batch if batch_first and x.shape[0] > 1 else None
+    return jax.lax.with_sharding_constraint(
+        x, P(b, None, _state.model, None))
+
+
+def constrain_tokens(x):
+    """x: [B, T, d] residual-stream activations.  With seq_parallel the
+    token axis shards over 'model' between blocks (sequence parallelism:
+    norms/residuals run on T/16 tokens; GSPMD inserts the all-gather at
+    the next matmul and a reduce-scatter after — replacing the larger
+    all-reduce + full-activation all-gathers of plain TP)."""
+    if not active() or not getattr(_state, "seq_parallel", False):
+        # only constrain the residual stream under explicit sequence
+        # parallelism: the unconditional P(b, None, None) pin can trigger
+        # an XLA SPMD gather-partitioning bug for d-sharded embeddings
+        # inside accumulation scans (observed on arctic train_4k)
+        return x
+    b = _state.batch if x.shape[0] > 1 else None
+    t = _state.model if x.shape[1] % 16 == 0 else None
+    return jax.lax.with_sharding_constraint(x, P(b, t, None))

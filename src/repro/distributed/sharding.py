@@ -1,0 +1,193 @@
+"""Per-architecture-family GSPMD sharding rules.
+
+Mesh axes: ``("data", "model")`` single-pod (16x16 = 256 chips) or
+``("pod", "data", "model")`` multi-pod (2x16x16 = 512).  Batch shards
+over ("pod","data"); tensor/expert parallelism over "model".
+
+Rules are name-based over the params pytree (paths end in a leaf name
+that identifies the op):
+
+  last-axis 'model'      : wq wk wv w_gate w_up in_proj bq bk bv conv_w
+                           conv_b dt_bias A_log D norm_w embed-d lm_head-V
+  second-to-last 'model' : wo w_down out_proj
+  expert axis 'model'    : moe w_gate/w_up/w_down ([E, d, f] etc.)
+  replicated             : ln* q_norm k_norm final_norm router
+
+GSPMD pads non-divisible dims (40 heads over 16, 40 experts over 16),
+which the dry-run memory analysis accounts for honestly.
+
+Activations / caches:
+  tokens  [B, T]            -> (dp, None)
+  KV      [n, B, S, H, D]   -> (None, dp, None, 'model', None)
+  ssm     [n, B, H, P, N]   -> (None, dp, 'model', None, None)
+  batch=1 (long_500k)       -> dp dropped (replicated batch)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+def data_axes(mesh) -> Tuple:
+    """The composite data-parallel axis: ('pod','data') when a pod axis
+    exists, else 'data'."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+_LAST_MODEL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "bq", "bk",
+               "bv", "conv_w", "conv_b", "dt_bias", "A_log", "D", "norm_w",
+               "projector"}
+_PENULT_MODEL = {"wo", "w_down", "out_proj"}
+_REPLICATED = {"ln1", "ln2", "ln_x", "ln_attn", "final_norm", "q_norm",
+               "k_norm", "router"}
+
+
+def _param_rule(path, leaf, model_size: int) -> P:
+    """jit input shardings demand exact divisibility (GSPMD pads only
+    intermediates), so every rule falls back along a preference chain and
+    ends replicated if nothing divides."""
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    in_moe = "moe" in names
+    nd = leaf.ndim
+
+    def at(*axes: int) -> P:
+        for axis in axes:
+            if leaf.shape[axis] % model_size == 0 and leaf.shape[axis] > 1:
+                spec = [None] * nd
+                spec[axis] = "model"
+                return P(*spec)
+        return P()
+
+    if name == "embed":
+        return at(-1)                      # [V, d] shard d (cheap gather)
+    if name == "lm_head":
+        return at(-1, -2)                  # [d, V] vocab, else d
+    if name in _REPLICATED:
+        return P()
+    if in_moe and name in ("w_gate", "w_up", "w_down"):
+        return at(-3, -1, -2)              # expert parallel, else TP
+    if name in _LAST_MODEL:
+        return at(-1)
+    if name in _PENULT_MODEL:
+        return at(-2)
+    return P()
+
+
+def param_specs(cfg: ModelConfig, model_size: int = 16):
+    shapes = tf.abstract_params(cfg)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _param_rule(p, l, model_size), shapes)
+
+
+def opt_state_specs(cfg: ModelConfig, zero1: bool = False,
+                    mesh=None):
+    """AdamW moments shard like params.  zero1=True additionally shards
+    every moment's largest divisible axis over the data axis (optimizer
+    state sharding — beyond-paper §Perf optimization)."""
+    from repro.training.optimizer import OptState
+    ps = param_specs(cfg)
+    if not zero1:
+        return OptState(step=P(), m=ps, v=ps)
+
+    shapes = tf.abstract_params(cfg)
+    dp = data_axes(mesh) if mesh is not None else ("data",)
+
+    def zspec(spec: P, leaf) -> P:
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # put dp on the first free axis (moments are only touched in the
+        # optimizer, so extra resharding cost is confined to the update)
+        for i, e in enumerate(entries):
+            if e is None and leaf.shape[i] > 1:
+                entries[i] = dp
+                break
+        return P(*entries)
+
+    zs = jax.tree.map(zspec, ps, shapes)
+    return OptState(step=P(), m=zs, v=zs)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, mesh, batch: int, family_inputs: bool
+                = True):
+    dp = data_axes(mesh)
+    bdim = dp if batch > 1 else None
+    spec = {"tokens": P(bdim, None), "labels": P(bdim, None)}
+    if cfg.family == "vlm":
+        spec["image_embeds"] = P(bdim, None, None)
+    if cfg.family == "audio":
+        spec["audio_embeds"] = P(bdim, None, None)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int, max_seq: int,
+                cross_len: int = 8, kv_mode: str = "auto"):
+    """Spec tree congruent with tf.init_cache output.
+
+    kv_mode:
+      'auto'  — KV heads shard over 'model' when divisible, else the
+                sequence axis (baseline; S-sharded writes reshard in-scan
+                and can trigger GSPMD full rematerialization).
+      'batch' — KV shards over the data axis only, replicated across
+                'model': every cache write is device-local (§Perf
+                optimization for collective-bound prefill), at the cost
+                of model_size x more KV memory per device.
+      'seq'   — force sequence-axis sharding.
+    """
+    dp = data_axes(mesh)
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    bdim = dp if batch > 1 else None
+    dp_size = mesh.devices.size // model_size
+
+    def bspec(dim: int):
+        return bdim if (bdim and dim % dp_size == 0) else None
+
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        if name in ("k", "v", "ck", "cv"):
+            b, s, h = leaf.shape[1], leaf.shape[2], leaf.shape[3]
+            if kv_mode == "batch":
+                return P(None, bspec(b), None, None, None)
+            if kv_mode == "seq" and s % model_size == 0:
+                return P(None, bspec(b), "model", None, None)
+            if kv_mode == "auto":
+                if h % model_size == 0:
+                    return P(None, bspec(b), None, "model", None)
+                if s % model_size == 0:
+                    return P(None, bspec(b), "model", None, None)
+            return P(None, bspec(b), None, None, None)
+        if name == "ssm":
+            h = leaf.shape[2]
+            m = "model" if h % model_size == 0 else None
+            return P(None, bspec(leaf.shape[1]), m, None, None)
+        if name == "conv":
+            c = leaf.shape[3]
+            m = "model" if c % model_size == 0 else None
+            return P(None, bspec(leaf.shape[1]), None, m)
+        return P(*([None] * leaf.ndim))
+
+    shapes = tf.abstract_cache(cfg, batch, max_seq, cross_len=cross_len)
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def shard(mesh, spec_tree):
+    """Spec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,174 @@
+"""Real JAX serving engine: executes mixed chunked-prefill + decode
+batches on an actual model (runnable on CPU with small configs; the same
+code path jit-lowers for the TPU meshes in the dry-run).
+
+Shapes are static per compiled variant: decode always runs the full slot
+batch (inactive rows are harmless — masks derive validity from each
+row's own position, and recurrent state is zeroed at slot assignment);
+prefill chunks run row-wise with exact shapes (distinct chunk lengths
+compile once each — the demo quantizes prompt lengths to bound variants).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import migrate
+from repro.engine.kvcache import SlotTable
+from repro.engine.request import Request
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+class JaxExecutor:
+    """Implements the core.instance.Executor protocol with a real model."""
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int, max_seq: int,
+                 eos_id: Optional[int] = None, greedy: bool = True,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.cache = tf.init_cache(cfg, n_slots, max_seq)
+        self.slots = SlotTable(n_slots)
+        self.positions = np.zeros(n_slots, np.int32)
+        self.last_token = np.zeros(n_slots, np.int32)
+        self._rng = np.random.default_rng(seed)
+
+        @jax.jit
+        def _decode(params, cache, tokens, pos):
+            logits, cache, _ = tf.forward(params, cfg, tokens, pos[:, None],
+                                          cache)
+            return logits[:, -1], cache
+
+        self._decode = _decode
+
+        @functools.partial(jax.jit, static_argnames=("T",))
+        def _prefill_row(params, row_cache, tokens, start, T):
+            del T
+            positions = start[:, None] + jnp.arange(
+                tokens.shape[1], dtype=jnp.int32)[None]
+            logits, row_cache, _ = tf.forward(params, cfg, tokens, positions,
+                                              row_cache)
+            return logits[:, -1], row_cache
+
+        self._prefill_row = _prefill_row
+
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request):
+        if req.rid in getattr(self, "_preadded", set()):
+            # state already inserted by a migration (insert_state)
+            self._preadded.discard(req.rid)
+            return
+        slot = self.slots.acquire(req.rid)
+        self.cache = migrate.zero_row(self.cache, slot)
+        self.positions[slot] = 0
+        if req.prompt_tokens is None:
+            req.prompt_tokens = list(
+                self._rng.integers(1, self.cfg.vocab_size,
+                                   size=req.prompt_len))
+
+    def release(self, req: Request):
+        self.slots.release(req.rid)
+
+    # ------------------------------------------------------------------
+    def _row_cache(self, slot: int):
+        return {"segments": jax.tree.map(
+            lambda a: a[:, slot:slot + 1], self.cache["segments"])}
+
+    def _write_row_cache(self, slot: int, row_cache):
+        self.cache = {"segments": jax.tree.map(
+            lambda a, r: a.at[:, slot:slot + 1].set(r),
+            self.cache["segments"], row_cache["segments"])}
+
+    def _sample(self, logits_row) -> int:
+        if self.greedy:
+            return int(jnp.argmax(logits_row))
+        p = np.asarray(jax.nn.softmax(logits_row.astype(jnp.float32)))
+        return int(self._rng.choice(len(p), p=p / p.sum()))
+
+    # ------------------------------------------------------------------
+    def execute(self, plan) -> Dict[int, bool]:
+        eos: Dict[int, bool] = {}
+        # --- chunked prefill (row-wise, exact shapes) ---
+        for req, take in plan.prefill_items:
+            slot = self.slots.slot(req.rid)
+            chunk = np.asarray(
+                req.prompt_tokens[req.prefill_pos:req.prefill_pos + take],
+                np.int32)[None]
+            start = jnp.full((1,), req.prefill_pos, jnp.int32)
+            last, row_cache = self._prefill_row(
+                self.params, self._row_cache(slot), jnp.asarray(chunk),
+                start, T=take)
+            self._write_row_cache(slot, row_cache)
+            self.positions[slot] = req.prefill_pos + take
+            if take == req.prefill_remaining:
+                # the sampled first token is NOT yet in the cache; it is
+                # written when fed to the next decode step at position
+                # == prompt_len (positions[slot] already points there).
+                tok = self._sample(last[0])
+                req.output_tokens.append(tok)
+                self.last_token[slot] = tok
+        # --- decode (full slot batch, one call) ---
+        if plan.decode_reqs:
+            tokens = jnp.asarray(self.last_token[:, None])
+            pos = jnp.asarray(self.positions)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tokens, pos)
+            active = [(r, self.slots.slot(r.rid)) for r in plan.decode_reqs]
+            for req, slot in active:
+                tok = self._sample(logits[slot])
+                req.output_tokens.append(tok)
+                self.last_token[slot] = tok
+                self.positions[slot] += 1
+                if self.eos_id is not None and tok == self.eos_id:
+                    eos[req.rid] = True
+        return eos
+
+    # ------------------------------------------------------------------
+    def extract_state(self, req: Request):
+        slot = self.slots.slot(req.rid)
+        row = migrate.extract_row(self.cache, slot)
+        return {"row": row, "pos": int(self.positions[slot]),
+                "last_token": int(self.last_token[slot])}
+
+    def insert_state(self, req: Request, state):
+        slot = self.slots.acquire(req.rid)
+        self.cache = migrate.insert_row(self.cache, state["row"], slot)
+        self.positions[slot] = state["pos"]
+        self.last_token[slot] = state["last_token"]
+        # re-acquired below by add_request semantics: mark as pre-added
+        self._preadded = getattr(self, "_preadded", set())
+        self._preadded.add(req.rid)
+
+    def migration_bytes(self, req: Request) -> int:
+        slot = self.slots.slot(req.rid)
+        return migrate.row_bytes(migrate.extract_row(self.cache, slot))
+
+
+class SimExecutor:
+    """Token oracle for the event-driven simulator: no tensors, no
+    compute.  EOS arrives when the request's hidden output length is
+    reached (the instance observes it only as done())."""
+
+    def execute(self, plan) -> Dict[int, bool]:
+        return {}
+
+    def add_request(self, req: Request):
+        pass
+
+    def release(self, req: Request):
+        pass
+
+    def extract_state(self, req: Request):
+        return None
+
+    def insert_state(self, req: Request, state):
+        pass

@@ -1,0 +1,43 @@
+"""KV/state migration between instances — the substrate of flowing decode
+scheduling.
+
+Cache pytrees are segment-stacked: every leaf has layout
+``[n_periods, B, ...]`` (batch is axis 1).  A migration extracts one batch
+row across all leaves, ships it (in production: ICI point-to-point,
+modeled by ``CostModel.transfer_time``), and inserts it into a free slot
+of the destination instance's cache.
+
+The paper implements this as many-to-many NCCL transfers decoupled from
+the critical path (§3.5); here the copy is an array op and the *time* is
+charged by the estimator, keeping the scheduling semantics identical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def extract_row(cache, slot: int):
+    """Copy one request's state out of a cache pytree (batch axis 1)."""
+    return jax.tree.map(lambda a: a[:, slot], cache["segments"])
+
+
+def insert_row(cache, row, slot: int):
+    """Insert an extracted row into a cache at ``slot``; returns new cache."""
+    new_segments = jax.tree.map(
+        lambda a, r: a.at[:, slot].set(r), cache["segments"], row)
+    return {"segments": new_segments}
+
+
+def zero_row(cache, slot: int):
+    """Reset one slot's state (recurrent SSM/conv state must not leak
+    between requests; KV is masked by position so zeroing is belt-and-
+    braces)."""
+    new_segments = jax.tree.map(
+        lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot])),
+        cache["segments"])
+    return {"segments": new_segments}
+
+
+def row_bytes(row) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(row))

@@ -1,0 +1,123 @@
+"""Request lifecycle for the serving engine and simulator.
+
+A request moves through:  QUEUED -> PREFILL -> DECODE -> FINISHED,
+possibly migrating between instances during DECODE (flowing decode
+scheduling) and having its prefill and decode on *different* instances
+(disaggregated request handling — hybrid mode's key freedom).
+
+Latency accounting follows the paper (§2.1 / vLLM measurement):
+  TTFT  = first-token time - arrival (includes queueing, prefill
+          execution, and any decode-queue wait before the first decode).
+  TPOT  = (last_token_time - first_token_time) / (n_output - 1),
+          i.e. mean per-token latency excluding the first token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional
+
+_rid_counter = itertools.count()
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    MIGRATING = "migrating"
+    FINISHED = "finished"
+    REJECTED = "rejected"      # early rejection (proxy, Mooncake-style)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt_len: int
+    max_new_tokens: int
+    arrival: float = 0.0
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
+    # hidden ground truth for the simulator (the SCHEDULER must never read
+    # this — output length is unknown a priori; paper Challenge 2):
+    hidden_output_len: Optional[int] = None
+    prompt_tokens: Optional[list] = None      # real engine only
+
+    state: State = State.QUEUED
+    prefill_pos: int = 0                      # prompt tokens processed
+    output_len: int = 0                       # tokens emitted so far
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+
+    # timing
+    first_token_time: Optional[float] = None
+    last_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    prefill_instance: Optional[int] = None
+    decode_instance: Optional[int] = None
+    n_migrations: int = 0
+    # flowing-decode bookkeeping: output length at the last backflow —
+    # TPOT of a flowed-back request is "reset" (paper §3.3 step 3)
+    tpot_reset_len: int = 0
+    tpot_reset_time: Optional[float] = None
+    # prefill tokens co-batched during this request's decode iterations
+    # (numerator of "interference intensity", paper §2.3.1)
+    interference_tokens: int = 0
+
+    # ----------------------------------------------------------------
+    @property
+    def target_output_len(self) -> int:
+        if self.hidden_output_len is not None:
+            return min(self.hidden_output_len, self.max_new_tokens)
+        return self.max_new_tokens
+
+    @property
+    def prefill_remaining(self) -> int:
+        return self.prompt_len - self.prefill_pos
+
+    @property
+    def context_len(self) -> int:
+        return self.prefill_pos + self.output_len
+
+    def record_token(self, now: float):
+        self.output_len += 1
+        if self.first_token_time is None:
+            self.first_token_time = now
+            self.tpot_reset_time = now
+        self.last_token_time = now
+
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    def tpot(self) -> Optional[float]:
+        """Mean per-output-token latency, excluding the first token."""
+        if self.first_token_time is None or self.output_len <= 1:
+            return None
+        return ((self.last_token_time - self.first_token_time)
+                / (self.output_len - 1))
+
+    def current_tpot(self, now: float) -> Optional[float]:
+        """TPOT *since the last backflow reset* — Algorithm 1 monitors this
+        to decide flow-back (paper: 'logically treated as a new request,
+        with its output length reset')."""
+        n = self.output_len - self.tpot_reset_len
+        if self.tpot_reset_time is None or n <= 1:
+            return None
+        return (self.last_token_time - self.tpot_reset_time) / (n - 1)
+
+    def reset_tpot_window(self):
+        self.tpot_reset_len = self.output_len
+        self.tpot_reset_time = self.last_token_time
+
+    def done(self) -> bool:
+        return self.output_len >= self.target_output_len
+
+    @property
+    def effective_output_len(self) -> int:
+        """Output length since the last backflow reset — what longest-first
+        degradation ranks on (a flowed-back request counts as 'new')."""
+        return self.output_len - self.tpot_reset_len
+
+    def interference_intensity(self) -> Optional[float]:
+        if self.output_len == 0:
+            return None
+        return self.interference_tokens / self.output_len

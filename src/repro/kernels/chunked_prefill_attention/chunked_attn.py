@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: flash attention for a chunked-prefill chunk.
+
+TPU adaptation notes (vs the CUDA chunked-prefill kernels in vLLM):
+  * no warps / shared memory — the streaming-softmax state (m, l, acc)
+    lives in VMEM scratch that persists across the sequential TPU grid;
+  * HBM->VMEM movement is expressed declaratively with BlockSpecs; the
+    kv-block axis is the innermost grid dimension so each (batch, head,
+    q-block) accumulates over kv blocks in order;
+  * GQA is handled by folding the q-head group into the q-row axis
+    (rows = g * Tq + t), so the MXU matmul operates on [BQ, D] x [D, BK]
+    tiles with D and BK multiples of 128 and BQ a multiple of 8.
+
+Out-of-range kv blocks (beyond the causal frontier of a q block) are
+skipped with ``pl.when`` — their DMA still lands but no FLOPs are spent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(prefix_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, bq: int, bk: int, tq: int, n_kb: int, scale: float):
+    kb = pl.program_id(3)
+    qb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    prefix = prefix_ref[0, 0]
+    rows = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)[:, 0]
+    t = jax.lax.rem(rows, tq)
+    qpos = prefix + t                                   # [BQ]
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)[:, 0]
+
+    # causal frontier: this kv block contributes iff its first key position
+    # is <= the largest query position in the q block
+    @pl.when(kb * bk <= prefix + (qb + 1) * bq - 1)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # [BQ, D]
+        k = k_ref[0, 0].astype(jnp.float32)             # [BK, D]
+        v = v_ref[0, 0].astype(jnp.float32)             # [BK, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [BQ, BK]
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < prefix + tq)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                             # [BQ, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def chunked_prefill_attention_kernel(q, k, v, prefix, *, tq: int,
+                                     bq: int = 128, bk: int = 128,
+                                     interpret: bool = True):
+    """q: [B, Hkv, R, D] with R = G*Tq (g-major rows); k/v: [B, Hkv, S, D];
+    prefix: int32 [1, 1].  Returns [B, Hkv, R, D]."""
+    B, Hkv, R, D = q.shape
+    S = k.shape[2]
+    bq = min(bq, R)
+    bk = min(bk, S)
+    assert R % bq == 0 and S % bk == 0, (R, bq, S, bk)
+    n_qb, n_kb = R // bq, S // bk
+    grid = (B, Hkv, n_qb, n_kb)
+
+    kern = functools.partial(_kernel, bq=bq, bk=bk, tq=tq, n_kb=n_kb,
+                             scale=D ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, qb, kb: (0, 0)),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qb, kb: (b, h, qb, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qb, kb: (b, h, kb, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qb, kb: (b, h, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, qb, kb: (b, h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(prefix, q, k, v)

@@ -1,0 +1,57 @@
+"""Jit'd public wrapper around the chunked-prefill attention kernel.
+
+Handles layout: model-side tensors are [B, Tq, Hq, D] / [B, S, Hkv, D];
+the kernel wants GQA folded into q rows ([B, Hkv, G*Tq, D], g-major) and
+KV in [B, Hkv, S, D].  Pads q rows to a multiple of the q block and S to
+a multiple of the kv block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunked_prefill_attention.chunked_attn import (
+    chunked_prefill_attention_kernel)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "interpret"))
+def chunked_prefill_attention(q, k, v, prefix, *, bq: int = 128,
+                              bk: int = 128, interpret: bool = True):
+    """q: [B, Tq, Hq, D]; k, v: [B, S, Hkv, D]; prefix: int32 scalar
+    (absolute start position of the chunk; cache slots < prefix+Tq valid).
+
+    Returns [B, Tq, Hq, D].
+    """
+    B, Tq, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    # fold heads: rows = g-major [B, Hkv, G*Tq, D]
+    qr = q.reshape(B, Tq, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    qr = qr.reshape(B, Hkv, G * Tq, D)
+    R = G * Tq
+    bq = min(bq, _round_up(R, 8))
+    pad_r = _round_up(R, bq) - R
+    if pad_r:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, pad_r), (0, 0)))
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bk = min(bk, _round_up(S, 128))
+    pad_s = _round_up(S, bk) - S
+    if pad_s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    prefix_arr = jnp.asarray(prefix, jnp.int32).reshape(1, 1)
+    # NOTE: rows are g-major, so row % Tq == t only when padding keeps the
+    # row count a multiple of Tq per g — we pass tq and mask padded rows'
+    # outputs away below instead.
+    out = chunked_prefill_attention_kernel(
+        qr, kt, vt, prefix_arr, tq=Tq, bq=bq, bk=bk, interpret=interpret)
+    out = out[:, :, :R].reshape(B, Hkv, G, Tq, D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, D)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for chunked-prefill attention.
+
+A prefill *chunk* of Tq tokens (absolute positions prefix..prefix+Tq-1)
+attends causally over a KV cache whose first prefix+Tq slots are valid
+(slot index == absolute position; the chunk's own K/V have already been
+written).  This is the compute hot-spot of chunked prefill (paper §2.3.1):
+P-heavy and D-heavy instances differ only in how large Tq is.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_prefill_attention_ref(q, k, v, prefix: int):
+    """q: [B, Tq, Hq, D]; k, v: [B, S, Hkv, D] with S >= prefix + Tq.
+
+    Returns [B, Tq, Hq, D] (same dtype as q).
+    """
+    B, Tq, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Tq, Hkv, g, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, kf) * (D ** -0.5)
+    qpos = prefix + jnp.arange(Tq)
+    kpos = jnp.arange(S)
+    mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < prefix + Tq)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, Hq, D).astype(q.dtype)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: GQA decode attention (flash-decoding style).
+
+One new token per sequence attends over a long KV cache.  TPU adaptation:
+the kv sequence is streamed through VMEM in blocks along the innermost
+(sequential) grid axis with running-softmax state in VMEM scratch — the
+TPU analogue of flash-decoding's split-KV reduction, without the
+cross-SM combine step (the sequential grid does the combine for free).
+
+The q "rows" axis carries the GQA group (G q-heads sharing one kv head),
+padded to the 8-sublane minimum.  Per-row context lengths (continuous
+batching) arrive as an int32 [B, 1] input broadcast into SMEM-like VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, bk: int, n_kb: int, scale: float):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)[0]
+
+    @pl.when(kb * bk < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [G', D]
+        k = k_ref[0, 0].astype(jnp.float32)              # [BK, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [G', BK]
+        mask = (kpos < length)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, lengths, *, bk: int = 512,
+                            interpret: bool = True):
+    """q: [B, Hkv, G', D] (G' = padded group size); k/v: [B, Hkv, S, D];
+    lengths: int32 [B, 1].  Returns [B, Hkv, G', D]."""
+    B, Hkv, Gp, D = q.shape
+    S = k.shape[2]
+    bk = min(bk, S)
+    assert S % bk == 0, (S, bk)
+    n_kb = S // bk
+    kern = functools.partial(_kernel, bk=bk, n_kb=n_kb, scale=D ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=(B, Hkv, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, kb: (b, 0)),
+            pl.BlockSpec((1, 1, Gp, D), lambda b, h, kb: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, kb: (b, h, kb, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, kb: (b, h, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Gp, D), lambda b, h, kb: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, D), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k, v)

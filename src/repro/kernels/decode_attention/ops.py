@@ -1,0 +1,40 @@
+"""Jit'd public wrapper for the decode-attention kernel: layout + padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attn import decode_attention_kernel
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k, v, lengths, *, bk: int = 512,
+                     interpret: bool = True):
+    """q: [B, Hq, D]; k, v: [B, S, Hkv, D]; lengths: [B] int32.
+
+    Returns [B, Hq, D].
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    Gp = _round_up(G, 8)
+    qg = q.reshape(B, Hkv, G, D)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bk = min(bk, _round_up(S, 128))
+    pad_s = _round_up(S, bk) - S
+    if pad_s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    out = decode_attention_kernel(qg, kt, vt,
+                                  lengths.astype(jnp.int32).reshape(B, 1),
+                                  bk=bk, interpret=interpret)
+    return out[:, :, :G].reshape(B, Hq, D)

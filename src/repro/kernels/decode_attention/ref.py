@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache
+with per-row valid lengths (continuous batching: each request has its own
+context length)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: [B, Hq, D]; k, v: [B, S, Hkv, D]; lengths: [B] int32 (number of
+    valid cache slots per row, slot index == position).
+
+    Returns [B, Hq, D].
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * (D ** -0.5)
+    mask = jnp.arange(S)[None] < lengths[:, None]          # [B, S]
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the SSD scan kernel, matching the signature of
+``repro.models.mamba2.ssd_chunked`` so it can be swapped in via the
+``ssd_fn`` hook of ``mamba2_block``."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, chunk: int, init_state=None, *,
+             interpret: bool = True):
+    """Same contract as mamba2.ssd_chunked:
+    x [b,t,h,p], dt [b,t,h], A [h], B/C [b,t,g,n] ->
+    (y [b,t,h,p], final_state [b,h,p,n] f32)."""
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    dtf = dt.astype(jnp.float32)
+    xdt = (x.astype(jnp.float32) * dtf[..., None]).transpose(0, 2, 1, 3)
+    dA = (dtf * A[None, None, :]).transpose(0, 2, 1)[..., None]  # [b,h,t,1]
+    Bh = jnp.repeat(B, rep, axis=2).transpose(0, 2, 1, 3)    # [b,h,t,n]
+    Ch = jnp.repeat(C, rep, axis=2).transpose(0, 2, 1, 3)
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+    y, sfin = ssd_scan_kernel(
+        xdt.astype(jnp.float32), dA.astype(jnp.float32),
+        Bh.astype(jnp.float32), Ch.astype(jnp.float32), s0,
+        chunk=chunk, interpret=interpret)
+    return y.transpose(0, 2, 1, 3).astype(x.dtype), sfin

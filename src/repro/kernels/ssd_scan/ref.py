@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked scan: re-exports the model's
+``ssd_chunked`` (which is itself validated against a naive sequential
+recurrence in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked as ssd_chunked_ref
+
+
+def ssd_naive_ref(x, dt, A, B, C, init_state=None):
+    """O(t) sequential recurrence — ground truth for both the chunked jnp
+    implementation and the Pallas kernel.
+
+    x [b,t,h,p], dt [b,t,h], A [h], B/C [b,t,g,n] -> (y, final_state)."""
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=2)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    s = (init_state.astype(jnp.float32) if init_state is not None
+         else jnp.zeros((b, h, p, n), jnp.float32))
+
+    def step(s, inp):
+        xi, di, Bi, Ci = inp
+        dA = jnp.exp(di * A[None])                       # [b,h]
+        s = s * dA[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xi, Bi, di)
+        y = jnp.einsum("bhn,bhpn->bhp", Ci, s)
+        return s, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    s, ys = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s

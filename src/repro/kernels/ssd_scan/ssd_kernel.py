@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060, GPU Triton
+kernels): the chunk axis is the innermost sequential grid dimension and
+the inter-chunk recurrent state [P, N] lives in VMEM scratch — the TPU
+systolic analogue of the GPU's separate state-passing kernel launch.
+Within a chunk everything is MXU matmuls on [L, N] x [N, P] tiles:
+
+  intra:   Y_c  = (C_c B_c^T ∘ Decay) (x_c * dt_c)
+  inter:   Y_c += (C_c ∘ exp(cum)) S_prev^T
+  state:   S    = exp(seg) S_prev + (x_c dt_c ∘ sdecay)^T B_c
+
+Inputs are pre-fused in ops.py: xdt = x*dt and dA = dt*A are elementwise
+and cheaper to compute outside the kernel (keeps VMEM traffic to the
+minimum set of operands).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xdt_ref, dA_ref, b_ref, c_ref, s0_ref, y_ref, sfin_ref,
+            state_ref, *, L: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    xdt = xdt_ref[0, 0].astype(jnp.float32)       # [L, P]
+    dA = dA_ref[0, 0].astype(jnp.float32)         # [L, 1] column
+    B = b_ref[0, 0].astype(jnp.float32)           # [L, N]
+    C = c_ref[0, 0].astype(jnp.float32)           # [L, N]
+
+    cum = jnp.cumsum(dA[:, 0])                    # [L] inclusive
+    seg = cum[L - 1]
+
+    # intra-chunk: (C B^T ∘ decay) xdt
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, L]
+    li = cum[:, None]
+    lj = cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    # mask inside the exponent (anti-causal li - lj > 0 would overflow)
+    decay = jnp.exp(jnp.where(ii >= jj, li - lj, -1e30))
+    y = jax.lax.dot_general(cb * decay, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [L, P]
+
+    # inter-chunk: C exp(cum) S_prev^T   (state [P, N])
+    s_prev = state_ref[...]
+    y += jax.lax.dot_general(C * jnp.exp(cum)[:, None], s_prev,
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # state update: S = exp(seg) S_prev + (xdt ∘ sdecay)^T B
+    sdecay = jnp.exp(seg - cum)[:, None]          # [L, 1]
+    upd = jax.lax.dot_general(xdt * sdecay, B, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [P, N]
+    state_ref[...] = s_prev * jnp.exp(seg) + upd
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(c == n_chunks - 1)
+    def _emit_state():
+        sfin_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_kernel(xdt, dA, B, C, s0, *, chunk: int, interpret: bool = True):
+    """xdt: [b, h, t, p]; dA: [b, h, t, 1]; B, C: [b, h, t, n] (already
+    repeated over head groups); s0: [b, h, p, n] f32.
+
+    Returns (y [b, h, t, p], final_state [b, h, p, n] f32).
+    """
+    b, h, t, p = xdt.shape
+    n = B.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    kern = functools.partial(_kernel, L=chunk, n_chunks=nc)
+    y, sfin = pl.pallas_call(
+        kern,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, c: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, c: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, p), xdt.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xdt, dA, B, C, s0)
+    return y, sfin

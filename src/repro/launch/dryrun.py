@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture x input shape) case on the
+production meshes (single-pod 16x16 and multi-pod 2x16x16), records
+memory_analysis / cost_analysis / collective bytes, and writes one JSON
+artifact per case under runs/dryrun/.
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks
+the device count at first initialization.  Nothing else in the repo sets
+this flag — smoke tests and benchmarks see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis.roofline import (collective_bytes_from_hlo,
+                                     roofline_report)
+from repro.configs import ASSIGNED, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (SHAPES, applicable, build_case, probe_cfg,
+                                true_periods)
+
+RUNS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "runs", "dryrun")
+
+
+def _compile_case(case, mesh, use_hints: bool = False,
+                  seq_parallel: bool = False):
+    from repro.distributed import hints as hints_mod
+    from repro.distributed.sharding import data_axes
+    with mesh:
+        shardings = jax.tree.map(
+            lambda s: jax.NamedSharding(mesh, s), case.in_specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        jf = jax.jit(case.fn, in_shardings=shardings,
+                     donate_argnums=case.donate)
+        if use_hints:
+            with hints_mod.hints(data_axes(mesh), "model",
+                                 seq_parallel=seq_parallel):
+                lowered = jf.lower(*case.args)
+        else:
+            lowered = jf.lower(*case.args)
+        return lowered.compile()
+
+
+def _probe_costs(case_builder, mesh, use_hints: bool = False,
+                 seq_parallel: bool = False) -> dict:
+    """Loop-aware cost reconstruction.  cost_analysis counts each scan
+    body ONCE; shallow fully-unrolled probes recover per-period (and, for
+    prefill, per-chunk) costs exactly:
+
+      train/decode:  f(d)   = A + d*E              probes d=1,2
+      prefill:       f(d,k) = A + d*E + (k-1)*B + (k-1)*d*C
+                                                   probes (1,1)(2,1)(1,2)(2,2)
+
+    Returns corrected {flops, bytes, collective} per device."""
+
+    def measure(d, k):
+        case = case_builder(d, k)
+        comp = _compile_case(case, mesh, use_hints=use_hints,
+                             seq_parallel=seq_parallel)
+        cost = comp.cost_analysis()
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(collective_bytes_from_hlo(comp.as_text())),
+        }
+
+    probe_case = case_builder(1, 1)   # built (not compiled) for metadata
+    cfg = get_config(probe_case.arch)
+    D = true_periods(cfg)
+    info = SHAPES[probe_case.shape]
+    if probe_case.kind == "prefill":
+        K = (info["seq"] if cfg.family != "vlm"
+             else (info["seq"] - 4096)) // info["chunk"]
+        f11, f21 = measure(1, 1), measure(2, 1)
+        f12, f22 = measure(1, 2), measure(2, 2)
+        out = {}
+        for key in ("flops", "bytes", "coll"):
+            # clamp increments at 0: XLA occasionally optimizes the d=2
+            # probe below d=1 (CSE across unrolled periods), which would
+            # extrapolate negative
+            E = max(f21[key] - f11[key], 0.0)
+            C = max(f22[key] - f12[key] - E, 0.0)
+            B = max(f12[key] - f11[key] - C, 0.0)
+            A = max(f11[key] - E, 0.0)
+            out[key] = max(A + D * E + (K - 1) * B + (K - 1) * D * C,
+                           f11[key])
+        return out
+    f1, f2 = measure(1, 1), measure(2, 1)
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        E = max(f2[key] - f1[key], 0.0)
+        A = max(f1[key] - E, 0.0)
+        out[key] = max(A + D * E, f1[key])
+    return out
+
+
+def run_case(arch: str, shape: str, multi_pod: bool,
+             verbose: bool = True, probes: bool = True,
+             use_hints: bool = True) -> dict:
+    """Head-axis sharding constraints (hints) are applied where the
+    §Perf measurements showed them to win: prefill (removes partial-sum
+    score all-reduces, up to 10x collective reduction) and FSDP training
+    (stops XLA hoisting expert-weight gathers).  They are OFF for decode
+    and non-FSDP training, where padding small head counts regressed
+    collectives/memory (EXPERIMENTS.md §Perf, promoted-optimizations
+    note).  Un-hinted baselines: runs/dryrun_baseline."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    case = build_case(arch, shape, mesh)
+    if use_hints:
+        use_hints = (case.kind == "prefill"
+                     or (case.kind == "train" and "fsdp" in case.note))
+    t0 = time.time()
+    compiled = _compile_case(case, mesh, use_hints=use_hints)
+    t_compile = time.time() - t0
+    t_lower = 0.0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    n_dev = mesh.devices.size
+    corrected = None
+    if probes:
+        kind = SHAPES[shape]["kind"]
+
+        def builder(d, k):
+            return build_case(
+                arch, shape, mesh, fsdp=("fsdp" in case.note),
+                cfg=probe_cfg(get_config(arch), d),
+                prefill_chunks=(k if kind == "prefill" else None))
+
+        corrected = _probe_costs(builder, mesh, use_hints=use_hints)
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "kind": case.kind, "note": case.note,
+        "compile_s": round(t_compile, 1),
+        # memory_analysis is per-device on the SPMD module
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "out_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_bytes_per_device": int(mem.argument_size_in_bytes
+                                     + mem.output_size_in_bytes
+                                     + mem.temp_size_in_bytes
+                                     - mem.alias_size_in_bytes),
+        # raw cost_analysis (scan bodies counted ONCE — see probes)
+        "raw_flops_per_device": float(cost.get("flops", 0.0)),
+        "raw_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "raw_collective_bytes_per_device": coll,
+    }
+    if corrected is not None:
+        # loop-aware reconstruction (per-device)
+        rec["flops_per_device"] = corrected["flops"]
+        rec["hlo_bytes_accessed_per_device"] = corrected["bytes"]
+        rec["collective_bytes_per_device"] = corrected["coll"]
+        rec["cost_method"] = "probe-corrected"
+    else:
+        rec["flops_per_device"] = rec["raw_flops_per_device"]
+        rec["hlo_bytes_accessed_per_device"] = rec["raw_bytes_per_device"]
+        rec["collective_bytes_per_device"] = coll
+        rec["cost_method"] = "raw"
+    rec["roofline"] = roofline_report(rec)
+    if verbose:
+        print(json.dumps(rec, indent=2))
+    return rec
+
+
+def save(rec: dict):
+    os.makedirs(RUNS_DIR, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(RUNS_DIR, name), "w") as f:
+        json.dump(rec, f, indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cases = []
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    ok = fail = skip = 0
+    for arch in archs:
+        for shape in shapes:
+            app, why = applicable(arch, shape)
+            if not app:
+                print(f"SKIP {arch} x {shape}: {why}")
+                skip += 1
+                continue
+            for mp in meshes:
+                mname = "2x16x16" if mp else "16x16"
+                path = os.path.join(
+                    RUNS_DIR, f"{arch}__{shape}__{mname}.json")
+                if args.skip_existing and os.path.exists(path):
+                    ok += 1
+                    continue
+                tag = f"{arch} x {shape} x {mname}"
+                try:
+                    t0 = time.time()
+                    # roofline probes on the single-pod mesh only (the
+                    # multi-pod pass proves the pod axis lowers/compiles)
+                    rec = run_case(arch, shape, mp, verbose=False,
+                                   probes=not mp)
+                    save(rec)
+                    dom = rec["roofline"]["dominant"]
+                    print(f"OK   {tag}: peak/dev="
+                          f"{rec['peak_bytes_per_device']/2**30:.2f}GiB "
+                          f"dominant={dom} ({time.time()-t0:.0f}s)")
+                    ok += 1
+                except Exception as e:
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+                    fail += 1
+    print(f"\ndry-run complete: {ok} ok, {fail} failed, {skip} skipped")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

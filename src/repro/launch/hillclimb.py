@@ -1,0 +1,98 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Perf-iteration driver: compile one (arch x shape) case with sharding/
+config overrides and report the three roofline terms — the measurement
+loop of EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch qwen3-14b \
+      --shape prefill_32k --kv-mode batch
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from repro.analysis.roofline import collective_bytes_from_hlo, roofline_report
+from repro.configs import get_config
+from repro.launch.dryrun import _compile_case, _probe_costs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, build_case, probe_cfg
+
+
+def measure(arch: str, shape: str, *, kv_mode: str = "auto",
+            fsdp=None, cfg_override=None, probes: bool = True,
+            use_hints: bool = False, chunk: int = None,
+            seq_parallel: bool = False, accum_steps: int = 1,
+            label: str = "") -> dict:
+    mesh = make_production_mesh()
+    base_cfg = cfg_override or get_config(arch)
+    case = build_case(arch, shape, mesh, fsdp=fsdp, cfg=base_cfg,
+                      kv_mode=kv_mode, chunk_override=chunk,
+                      accum_steps=accum_steps)
+    t0 = time.time()
+    compiled = _compile_case(case, mesh, use_hints=use_hints, seq_parallel=seq_parallel)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    rec = {
+        "arch": arch, "shape": shape, "mesh": "16x16", "n_devices": 256,
+        "kind": case.kind, "note": f"{label or kv_mode}",
+        "compile_s": round(time.time() - t0, 1),
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "out_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_bytes_per_device": int(mem.argument_size_in_bytes
+                                     + mem.output_size_in_bytes
+                                     + mem.temp_size_in_bytes
+                                     - mem.alias_size_in_bytes),
+        "raw_flops_per_device": float(cost.get("flops", 0.0)),
+        "raw_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "raw_collective_bytes_per_device": float(coll),
+    }
+    if probes:
+        kind = SHAPES[shape]["kind"]
+
+        def builder(d, k):
+            return build_case(
+                arch, shape, mesh, fsdp=fsdp,
+                cfg=probe_cfg(base_cfg, d), kv_mode=kv_mode,
+                chunk_override=chunk, accum_steps=accum_steps,
+                prefill_chunks=(k if kind == "prefill" else None))
+
+        corr = _probe_costs(builder, mesh, use_hints=use_hints, seq_parallel=seq_parallel)
+        rec["flops_per_device"] = corr["flops"]
+        rec["hlo_bytes_accessed_per_device"] = corr["bytes"]
+        rec["collective_bytes_per_device"] = corr["coll"]
+        rec["cost_method"] = "probe-corrected"
+    else:
+        rec["flops_per_device"] = rec["raw_flops_per_device"]
+        rec["hlo_bytes_accessed_per_device"] = rec["raw_bytes_per_device"]
+        rec["collective_bytes_per_device"] = float(coll)
+        rec["cost_method"] = "raw"
+    rec["roofline"] = roofline_report(rec)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--kv-mode", default="auto")
+    ap.add_argument("--hints", action="store_true")
+    ap.add_argument("--chunk", type=int, default=None)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--label", default="")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+    rec = measure(args.arch, args.shape, kv_mode=args.kv_mode,
+                  probes=not args.no_probes, use_hints=args.hints,
+                  chunk=args.chunk, seq_parallel=args.seq_parallel,
+                  accum_steps=args.accum, label=args.label)
+    print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Functions, not module constants — importing this module never touches
+JAX device state, so smoke tests see 1 CPU device while the dry-run
+(which sets XLA_FLAGS before any import) sees 512.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; the multi-pod mesh adds a leading
+    'pod' axis (2 pods = 512 chips).  v5e pod slice topology."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model: int = 1):
+    """Whatever devices exist locally (tests / CPU examples)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,93 @@
+"""Serving launcher: run a TaiChi (or baseline) cluster.
+
+Two modes:
+  --engine sim   event-driven simulator with estimator timing (default;
+                 any registered arch, production scale)
+  --engine jax   real JAX engine on local devices with reduced configs
+                 (CPU demo; tokens are really computed)
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+      --policy taichi --np 2 --nd 2 --sp 1024 --sd 256 --qps 80
+  PYTHONPATH=src python -m repro.launch.serve --engine jax \
+      --arch smollm-135m --qps 2 --n 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, list_archs, reduced_config
+from repro.core.estimator import CostModel
+from repro.core.hw import InstanceSpec
+from repro.core.latency import SLO
+from repro.core.policies import Sliders
+from repro.sim.simulator import ServingConfig, build_cluster, run_sim
+from repro.sim.workload import WORKLOADS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--engine", choices=["sim", "jax"], default="sim")
+    ap.add_argument("--policy", default="taichi",
+                    choices=["taichi", "aggregation", "disaggregation"])
+    ap.add_argument("--np", type=int, default=2)
+    ap.add_argument("--nd", type=int, default=2)
+    ap.add_argument("--sp", type=int, default=1024)
+    ap.add_argument("--sd", type=int, default=256)
+    ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("--qps", type=float, default=40.0)
+    ap.add_argument("--n", type=int, default=300)
+    ap.add_argument("--workload", default="sharegpt",
+                    choices=sorted(WORKLOADS))
+    ap.add_argument("--ttft-slo", type=float, default=1.5)
+    ap.add_argument("--tpot-slo", type=float, default=0.030)
+    args = ap.parse_args()
+
+    slo = SLO(ttft=args.ttft_slo, tpot=args.tpot_slo)
+    sliders = Sliders(n_p=args.np, n_d=args.nd, s_p=args.sp, s_d=args.sd)
+
+    if args.engine == "sim":
+        sc = ServingConfig(model=args.arch, tp=args.tp, policy=args.policy,
+                           sliders=sliders)
+        st = run_sim(sc, slo, WORKLOADS[args.workload], args.qps, args.n)
+        c = st.cluster
+        print(json.dumps({**st.summary(),
+                          "policy": args.policy,
+                          "transfers": c.transfer_count,
+                          "backflows": c.backflow_count,
+                          "degrades": c.degrade_count}, indent=2))
+        return
+
+    # real-engine demo on CPU: reduced config, shared random params
+    from repro.engine.engine import JaxExecutor
+    from repro.models import transformer as tf
+    cfg = reduced_config(args.arch)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    sc = ServingConfig(model=args.arch, tp=1, policy=args.policy,
+                       sliders=Sliders(n_p=args.np, n_d=args.nd,
+                                       s_p=min(args.sp, 64),
+                                       s_d=min(args.sd, 32)),
+                       hbm_blocks=512)
+    factory = lambda: JaxExecutor(cfg, params, n_slots=8, max_seq=512)
+    cluster = build_cluster(sc, slo, executor_factory=factory)
+    # CostModel must describe the small model for timing coherence
+    from repro.sim.workload import LengthDist, WorkloadSpec
+    wl = WorkloadSpec("tiny",
+                      LengthDist(mu=3.4, sigma=0.4, lo=16, hi=128),
+                      LengthDist(mu=2.5, sigma=0.4, lo=4, hi=32))
+    reqs = wl.sample_requests(args.n, args.qps, seed=0)
+    cluster.run(reqs)
+    st = cluster.stats(reqs, slo, args.qps)
+    print(json.dumps({**st.summary(),
+                      "policy": args.policy,
+                      "real_tokens": sum(len(r.output_tokens)
+                                         for r in reqs),
+                      "transfers": cluster.transfer_count}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Dry-run case construction: (architecture x input-shape) -> a jittable
+step function + abstract inputs (ShapeDtypeStruct, zero allocation) +
+shardings for the production mesh.
+
+Input shapes (assigned):
+  train_4k     seq=4096    global_batch=256   train_step
+  prefill_32k  seq=32768   global_batch=32    full chunked prefill (4k chunks)
+  decode_32k   seq=32768   global_batch=128   serve_step (1 token, 32k KV)
+  long_500k    seq=524288  global_batch=1     serve_step (1 token, 512k KV)
+
+Applicability (DESIGN.md §Shape skips): long_500k runs only for archs
+with bounded attention state (zamba2 hybrid, mamba2 SSM, gemma3 sliding-
+window); pure full-attention archs skip it.  Modality notes: VLM prompts
+are [patch-embeds ; text] with the assigned seq as the combined length;
+audio backbones prefill/decode the text decoder against a fixed 1500-
+frame encoder context (frontends stubbed per the assignment carve-out).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train import make_train_step
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32, chunk=4096),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+LONG_CTX_ARCHS = {"zamba2-7b", "mamba2-1.3b", "gemma3-1b"}
+AUDIO_FRAMES = 1500
+
+
+def applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CTX_ARCHS:
+        return False, ("pure full-attention architecture: 512k dense KV has "
+                       "no sub-quadratic variant in the source model "
+                       "(DESIGN.md §Shape skips)")
+    return True, ""
+
+
+def _vlm_split(cfg: ModelConfig, seq: int) -> Tuple[int, int]:
+    """(image_tokens, text_tokens) with text a multiple of 512."""
+    img = min(4096, max(512, seq // 8))
+    return img, seq - img
+
+
+def _fsdp_needed(cfg: ModelConfig) -> bool:
+    """Weights-per-model-shard > 8 GiB -> shard weights over data too."""
+    per_shard = cfg.param_count() * 2 / 16
+    return per_shard > 8 * 1024 ** 3
+
+
+@dataclasses.dataclass
+class DryRunCase:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple                 # ShapeDtypeStructs
+    in_specs: tuple             # PartitionSpec trees
+    out_specs: object           # or None to let GSPMD propagate
+    donate: tuple = ()
+    note: str = ""
+
+
+def _mesh_sizes(mesh) -> Tuple[int, int]:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes["model"]
+    return model, mesh.devices.size // model
+
+
+def _fsdp_param_specs(cfg: ModelConfig, mesh):
+    """Augment TP specs with data-axis sharding on the largest divisible
+    free axis of every big weight (>= 32 MiB per model shard)."""
+    model_size, dp_size = _mesh_sizes(mesh)
+    base = shd.param_specs(cfg, model_size)
+    shapes = tf.abstract_params(cfg)
+    dp = shd.data_axes(mesh)
+
+    def aug(spec: P, leaf):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        div = model_size if "model" in entries else 1
+        if leaf.size * 2 / div < 32 * 1024 ** 2:
+            return P(*entries)
+        free = [i for i, e in enumerate(entries)
+                if e is None and leaf.shape[i] % dp_size == 0
+                and leaf.shape[i] > 1]
+        if not free:
+            return P(*entries)
+        ax = max(free, key=lambda i: leaf.shape[i])
+        entries[ax] = dp
+        return P(*entries)
+
+    return jax.tree.map(aug, base, shapes)
+
+
+def period_len(cfg: ModelConfig) -> int:
+    return len(cfg.segments()[0].pattern)
+
+
+def true_periods(cfg: ModelConfig) -> float:
+    """Number of scan periods in the full config (fractional when a
+    trailing partial segment exists — gemma3 26/6, zamba2 81/6)."""
+    return cfg.num_layers / period_len(cfg)
+
+
+def probe_cfg(cfg: ModelConfig, d: int) -> ModelConfig:
+    """Shallow fully-unrolled variant with exactly ``d`` periods — used
+    by the dry-run's loop-aware cost probes (cost_analysis counts a scan
+    body once; probes at d=1,2 recover the per-period cost exactly)."""
+    kw = dict(num_layers=period_len(cfg) * d, scan_unroll=True)
+    if cfg.family == "audio":
+        kw["num_encoder_layers"] = d
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_case(arch: str, shape: str, mesh,
+               fsdp: Optional[bool] = None,
+               cfg: Optional[ModelConfig] = None,
+               prefill_chunks: Optional[int] = None,
+               kv_mode: str = "auto",
+               chunk_override: Optional[int] = None,
+               accum_steps: int = 1) -> DryRunCase:
+    cfg = cfg or get_config(arch)
+    info = SHAPES[shape]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    dp = shd.data_axes(mesh)
+    bdim = dp if batch > 1 else None
+    dt = cfg.param_dtype
+
+    model_size, dp_size = _mesh_sizes(mesh)
+    params_abs = tf.abstract_params(cfg)
+    use_fsdp = _fsdp_needed(cfg) if fsdp is None else fsdp
+    pspecs = (_fsdp_param_specs(cfg, mesh) if use_fsdp
+              else shd.param_specs(cfg, model_size))
+    note = "fsdp" if use_fsdp else ""
+
+    if kind == "train":
+        opt_abs = jax.eval_shape(init_opt_state, params_abs)
+        ospecs = jax.tree.map(lambda _: None, opt_abs)  # placeholder
+        from repro.training.optimizer import OptState
+        ospecs = OptState(step=P(), m=pspecs, v=pspecs)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        bspecs = {"tokens": P(bdim, None), "labels": P(bdim, None)}
+        if cfg.family == "vlm":
+            img, txt = _vlm_split(cfg, seq)
+            batch_abs = {"tokens": jax.ShapeDtypeStruct((batch, txt),
+                                                        jnp.int32),
+                         "labels": jax.ShapeDtypeStruct((batch, txt),
+                                                        jnp.int32),
+                         "image_embeds": jax.ShapeDtypeStruct(
+                             (batch, img, cfg.vision_dim), dt)}
+            bspecs = dict(bspecs, image_embeds=P(bdim, None, None))
+        if cfg.family == "audio":
+            batch_abs["audio_embeds"] = jax.ShapeDtypeStruct(
+                (batch, AUDIO_FRAMES, cfg.d_model), dt)
+            bspecs = dict(bspecs, audio_embeds=P(bdim, None, None))
+        fn = make_train_step(cfg, AdamWConfig(), accum_steps=accum_steps)
+        return DryRunCase(arch, shape, kind, fn,
+                          (params_abs, opt_abs, batch_abs),
+                          (pspecs, ospecs, bspecs), None,
+                          donate=(0, 1), note=note)
+
+    cross = AUDIO_FRAMES if cfg.family == "audio" else 0
+    cspecs = shd.cache_specs(cfg, mesh, batch, seq, cross_len=cross,
+                             kv_mode=kv_mode)
+    if kind == "prefill":
+        chunk = chunk_override or info["chunk"]
+        kw = {}
+        img = 0
+        if cfg.family == "vlm":
+            img, txt = _vlm_split(cfg, seq)
+            txt = (txt // chunk) * chunk
+            kw["image_embeds"] = jax.ShapeDtypeStruct(
+                (batch, img, cfg.vision_dim), dt)
+        else:
+            txt = seq
+        if prefill_chunks is not None:
+            txt = chunk * prefill_chunks
+        if cfg.family == "audio":
+            kw["audio_embeds"] = jax.ShapeDtypeStruct(
+                (batch, AUDIO_FRAMES, cfg.d_model), dt)
+        cache_abs = tf.abstract_cache(cfg, batch, seq, dt, cross_len=cross)
+        tokens_abs = jax.ShapeDtypeStruct((batch, txt), jnp.int32)
+
+        kw_names = tuple(kw)
+
+        def fn(params, cache, tokens, *extras):
+            kwargs = dict(zip(kw_names, extras))
+            logits, cache = tf.full_prefill(params, cfg, tokens, cache,
+                                            chunk, **kwargs)
+            return jnp.argmax(logits, -1), cache
+
+        kwspecs = tuple(P(bdim, None, None) for _ in kw_names)
+        return DryRunCase(
+            arch, shape, kind, fn,
+            (params_abs, cache_abs, tokens_abs) + tuple(kw.values()),
+            (pspecs, cspecs, P(bdim, None)) + kwspecs,
+            None, donate=(1,), note=note)
+
+    # decode
+    cache_abs = tf.abstract_cache(cfg, batch, seq, dt, cross_len=cross)
+    tokens_abs = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+    def dfn(params, cache, tokens, pos):
+        logits, cache = tf.decode_step(params, cfg, tokens, cache, pos)
+        return jnp.argmax(logits, -1), cache
+
+    return DryRunCase(
+        arch, shape, kind, dfn,
+        (params_abs, cache_abs, tokens_abs, pos_abs),
+        (pspecs, cspecs, P(bdim, None), P(bdim)),
+        None, donate=(1,), note=note)

@@ -1,0 +1,44 @@
+"""Training launcher.
+
+Local mode (default) trains a reduced config on CPU for smoke/demo; the
+production path lowers the real config's train_step onto the production
+mesh (same code the dry-run compiles) — on actual v5e pods the only
+change is real devices behind the same mesh axes.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config, list_archs, reduced_config
+from repro.training.checkpoint import save_checkpoint
+from repro.training.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (assigned) config instead of the "
+                         "reduced smoke variant — CPU-feasible only for "
+                         "the smallest archs")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = (get_config(args.arch) if args.full_config
+           else reduced_config(args.arch))
+    params, history = train_loop(cfg, args.steps, args.batch, args.seq)
+    print(json.dumps(history, indent=2))
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, meta={"arch": cfg.name,
+                                                 "steps": args.steps})
+        print("checkpoint saved to", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

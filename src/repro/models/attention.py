@@ -1,0 +1,227 @@
+"""GQA attention with KV-cache support for train / chunked-prefill / decode.
+
+Cache layout per attention layer: ``{"k": [B, S, Hkv, Dh], "v": ...}``.
+``S`` is the cache capacity — the full max sequence for global layers or
+the sliding window for gemma3-style local layers (ring buffer).  Keys are
+stored with RoPE already applied at their absolute position, so reads are
+position-free.  Masks are computed analytically from the per-row write
+position (no stored position arrays needed for sequential writes).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rms_norm, split_keys
+
+# Opt-in Pallas kernel execution (interpret mode on CPU, native on TPU).
+# Applies to the full-cache (non-windowed) chunked-prefill / decode
+# attention paths; enable with `attention.use_kernels(True)` — parity
+# with the jnp path is asserted in tests/test_kernel_integration.py.
+_USE_KERNELS = False
+
+
+def use_kernels(on: bool):
+    global _USE_KERNELS
+    _USE_KERNELS = on
+
+
+def init_attention(key, cfg, *, rope: bool = True):
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = split_keys(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * dh), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, hkv * dh), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, hkv * dh), cfg.param_dtype),
+        "wo": dense_init(ks[3], (hq * dh, d), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((dh,), cfg.param_dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x):
+    B, T, _ = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,de->bte", x, p["wq"])
+    k = jnp.einsum("btd,de->bte", x, p["wk"])
+    v = jnp.einsum("btd,de->bte", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, hq, dh)
+    k = k.reshape(B, T, hkv, dh)
+    v = v.reshape(B, T, hkv, dh)
+    # pin kv-head-axis sharding: without this GSPMD may shard the
+    # head_dim contraction (head counts rarely divide the model axis)
+    # and emit partial-sum all-reduces of the full [B,H,T,S] scores
+    from repro.distributed import hints
+    k = hints.constrain_heads(k)
+    v = hints.constrain_heads(v)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q [B,T,Hq,D], k [B,S,Hkv,D] -> scores [B,Hkv,G,T,S]."""
+    from repro.distributed import hints
+    B, T, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(B, T, hkv, g, dh)
+    if hints.active():
+        import jax as _jax
+        from jax.sharding import PartitionSpec as _P
+        b = hints._state.batch if B > 1 else None
+        qg = _jax.lax.with_sharding_constraint(
+            qg, _P(b, None, hints._state.model, None, None))
+        k = hints.constrain_heads(k)
+    return jnp.einsum("btkgd,bskd->bkgts", qg, k) * (dh ** -0.5)
+
+
+def _gqa_out(probs, v, wo):
+    """probs [B,Hkv,G,T,S], v [B,S,Hkv,D] -> [B,T,d_model]."""
+    B, hkv, g, T, S = probs.shape
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    out = out.reshape(B, T, hkv * g * v.shape[-1])
+    return jnp.einsum("bte,ed->btd", out, wo)
+
+
+def _masked_softmax(scores, mask):
+    scores = scores.astype(jnp.float32)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid key (possible for padded ring slots) -> zero output
+    probs = jnp.where(jnp.any(mask, axis=-1, keepdims=True), probs, 0.0)
+    return probs
+
+
+def causal_mask(q_pos, kv_pos, window: int = 0):
+    """q_pos [B,T], kv_pos [B,S] absolute positions -> mask [B,1,1,T,S]."""
+    m = kv_pos[:, None, :] <= q_pos[:, :, None]
+    m &= kv_pos[:, None, :] >= 0
+    if window:
+        m &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    return m[:, None, None, :, :]
+
+
+def ring_slot_positions(write_end, capacity: int):
+    """Absolute position held by each ring-buffer slot after sequential
+    writes ending at ``write_end`` (exclusive).  write_end: [B]."""
+    j = jnp.arange(capacity)[None, :]
+    last = write_end[:, None] - 1
+    a = last - jnp.mod(last - j, capacity)
+    return jnp.where((a >= 0) & (write_end[:, None] > 0), a, -1)
+
+
+def write_cache(cache_k, cache_v, k_new, v_new, start):
+    """Write [B,T] new KV at absolute positions start..start+T (per row).
+
+    For ring buffers (capacity < max_seq) the slot is pos % capacity.
+    start: [B] int32.  Assumes T <= capacity.
+    """
+    B, T = k_new.shape[:2]
+    S = cache_k.shape[1]
+    pos = start[:, None] + jnp.arange(T)[None, :]
+    slots = jnp.mod(pos, S)
+    bidx = jnp.arange(B)[:, None].repeat(T, 1)
+    cache_k = cache_k.at[bidx, slots].set(k_new)
+    cache_v = cache_v.at[bidx, slots].set(v_new)
+    return cache_k, cache_v
+
+
+def self_attention(p, cfg, x, positions, cache=None, *, window: int = 0,
+                   rope: bool = True):
+    """positions: [B,T] absolute positions of x's tokens.
+
+    cache=None  -> pure in-chunk causal attention (training / encoder-free).
+    cache={k,v} -> write chunk into cache, attend over full cache (chunked
+                   prefill when T>1, decode when T==1).
+    Returns (out [B,T,d], new_cache).
+    """
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        mask = causal_mask(positions, positions, window)
+        probs = _masked_softmax(_gqa_scores(q, k), mask)
+        return _gqa_out(probs.astype(x.dtype), v, p["wo"]), None
+    S = cache["k"].shape[1]
+    start = positions[:, 0]
+    if window:
+        # Ring buffer: writing first would overwrite keys still needed by
+        # early queries in this chunk.  Attend over (prior cache + fresh
+        # chunk keys), then write the chunk (its last S tokens if T >= S).
+        prior_pos = ring_slot_positions(start, S)
+        k_all = jnp.concatenate([cache["k"], k], axis=1)
+        v_all = jnp.concatenate([cache["v"], v], axis=1)
+        kv_pos = jnp.concatenate([prior_pos, positions], axis=1)
+        mask = causal_mask(positions, kv_pos, window)
+        probs = _masked_softmax(_gqa_scores(q, k_all), mask)
+        out = _gqa_out(probs.astype(x.dtype), v_all, p["wo"])
+        if T >= S:
+            k, v = k[:, -S:], v[:, -S:]
+            start = positions[:, -1] + 1 - S
+        ck, cv = write_cache(cache["k"], cache["v"], k, v, start)
+        return out, {"k": ck, "v": cv}
+    ck, cv = write_cache(cache["k"], cache["v"], k, v, start)
+    if _USE_KERNELS:
+        if T == 1:
+            from repro.kernels.decode_attention.ops import decode_attention
+            o = decode_attention(q[:, 0], ck, cv,
+                                 (positions[:, -1] + 1).astype(jnp.int32))
+            o = o[:, None]
+        else:
+            # kernel takes a scalar chunk offset: rows are uniform within
+            # a prefill chunk call (the engine prefills row-wise)
+            from repro.kernels.chunked_prefill_attention.ops import (
+                chunked_prefill_attention)
+            o = chunked_prefill_attention(q, ck, cv, positions[0, 0])
+        out = jnp.einsum("bte,ed->btd",
+                         o.reshape(B, T, -1).astype(x.dtype), p["wo"])
+        return out, {"k": ck, "v": cv}
+    write_end = positions[:, -1] + 1
+    kv_pos = ring_slot_positions(write_end, S)
+    mask = causal_mask(positions, kv_pos, window)
+    probs = _masked_softmax(_gqa_scores(q, ck), mask)
+    out = _gqa_out(probs.astype(x.dtype), cv, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+def init_cross_attention(key, cfg):
+    return init_attention(key, cfg, rope=False)
+
+
+def cross_attention(p, cfg, x, kv, kv_valid=None):
+    """x [B,T,d] attends over precomputed cross KV {k,v} [B,S,Hkv,D]."""
+    q, _, _ = _project_qkv(p, cfg, x)
+    S = kv["k"].shape[1]
+    scores = _gqa_scores(q, kv["k"])
+    if kv_valid is None:
+        mask = jnp.ones(scores.shape[-2:], bool)[None, None, None]
+    else:
+        mask = kv_valid[:, None, None, None, :]
+    probs = _masked_softmax(scores, mask)
+    return _gqa_out(probs.astype(x.dtype), kv["v"], p["wo"])
+
+
+def project_cross_kv(p, cfg, enc_out):
+    """Compute cross-attention KV from encoder output once (prefill)."""
+    B, S, _ = enc_out.shape
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,de->bse", enc_out, p["wk"])
+    v = jnp.einsum("bsd,de->bse", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return {"k": k.reshape(B, S, hkv, dh), "v": v.reshape(B, S, hkv, dh)}

@@ -1,0 +1,216 @@
+"""Mamba2 (SSD — state-space duality) mixer layer in pure JAX.
+
+Implements the chunked SSD algorithm (arXiv:2405.21060) with support for
+an *initial state*, which is what makes chunked prefill and prefill→decode
+state handoff (the paper's "flowing" migration for SSM archs) exact.
+
+Cache per layer: ``{"conv": [B, k-1, C_in], "ssm": [B, H, P, N]}`` —
+O(1) in sequence length.  The same ``ssd_chunked`` function is the oracle
+(`ref.py`) for the Pallas ``ssd_scan`` kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm, split_keys
+
+
+def conv_channels(cfg) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    dinner = cfg.ssm_d_inner
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    G = cfg.ssm_ngroups
+    cin = conv_channels(cfg)
+    ks = split_keys(key, 4)
+    proj_out = 2 * dinner + 2 * G * N + H
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), cfg.param_dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, cin), cfg.param_dtype,
+                             scale=cfg.ssm_conv ** -0.5),
+        "conv_b": jnp.zeros((cin,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.zeros((dinner,), cfg.param_dtype),
+        "out_proj": dense_init(ks[2], (dinner, d), cfg.param_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core (also the kernel oracle)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x:  [b, t, h, p]    per-head inputs
+    dt: [b, t, h]       post-softplus step sizes
+    A:  [h]             negative real decay
+    B:  [b, t, g, n]    input projections  (g groups broadcast over heads)
+    C:  [b, t, g, n]    output projections
+    init_state: [b, h, p, n] or None
+    Returns (y [b,t,h,p], final_state [b,h,p,n]).  Requires t % chunk == 0.
+    """
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bf, rep, axis=3)          # [b,nc,l,h,n]
+    Ch = jnp.repeat(Cf, rep, axis=3)
+
+    dA = dtf * A[None, None, None, :]         # [b,nc,l,h]
+    cum = jnp.cumsum(dA, axis=2)              # inclusive cumsum within chunk
+    seg_sum = cum[:, :, -1]                   # [b,nc,h] total decay per chunk
+
+    # --- intra-chunk (quadratic within chunk) ---
+    # decay from j to i (i>=j): exp(cum_i - cum_j)
+    li = cum[:, :, :, None, :]                # [b,nc,i,1,h]
+    lj = cum[:, :, None, :, :]                # [b,nc,1,j,h]
+    iidx = jnp.arange(chunk)
+    causal = (iidx[:, None] >= iidx[None, :])[None, None, :, :, None]
+    # mask INSIDE the exponent: anti-causal entries have li - lj > 0 and
+    # exp would overflow to inf, poisoning gradients through the where
+    decay = jnp.exp(jnp.where(causal, li - lj, -1e30))
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)
+    xdt = xf * dtf[..., None]
+    y = jnp.einsum("bcijh,bcjhp->bcihp", cb * decay, xdt)
+
+    # --- chunk-final states ---
+    # state contribution of chunk c: sum_j exp(seg_sum - cum_j) B_j (x_j dt_j)
+    sdecay = jnp.exp(seg_sum[:, :, None, :] - cum)            # [b,nc,l,h]
+    chunk_states = jnp.einsum("bclhn,bclhp,bclh->bchpn", Bh, xdt, sdecay)
+
+    # --- inter-chunk recurrence over nc (sequential scan) ---
+    if init_state is None:
+        s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        s0 = init_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        cs, seg = inp                          # [b,h,p,n], [b,h]
+        prev = carry
+        new = prev * jnp.exp(seg)[:, :, None, None] + cs
+        return new, prev                       # emit state *entering* chunk
+
+    cs_t = jnp.moveaxis(chunk_states, 1, 0)    # [nc,b,h,p,n]
+    seg_t = jnp.moveaxis(seg_sum, 1, 0)        # [nc,b,h]
+    final, entering = jax.lax.scan(step, s0, (cs_t, seg_t))
+    entering = jnp.moveaxis(entering, 0, 1)    # [b,nc,h,p,n]
+
+    # --- inter-chunk output: C_i exp(cum_i) S_entering ---
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp", Ch, entering,
+                         jnp.exp(cum))
+    y = (y + y_inter).reshape(b, t, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """Single-token recurrence.  x [b,h,p], dt [b,h], B/C [b,g,n],
+    state [b,h,p,n] -> (y [b,h,p], new_state)."""
+    g = B.shape[1]
+    rep = x.shape[1] // g
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=1)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, :])                        # [b,h]
+    upd = jnp.einsum("bhp,bhn,bh->bhpn", xf, Bh, dtf)
+    new_state = state.astype(jnp.float32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv with state
+# ---------------------------------------------------------------------------
+
+def _causal_conv(xBC, w, b, conv_state):
+    """xBC [B,T,Cin]; w [k,Cin]; conv_state [B,k-1,Cin] or None."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], k - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    full = jnp.concatenate([pad, xBC], axis=1)            # [B, T+k-1, Cin]
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i] for i in range(k))
+    new_state = full[:, -(k - 1):] if k > 1 else None
+    return out + b, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full mixer layer
+# ---------------------------------------------------------------------------
+
+def mamba2_block(p, cfg, x, cache=None, *, ssd_fn=None):
+    """x [B,T,d].  cache None -> fresh sequence (train / full prefill,
+    states discarded unless needed).  cache given -> chunked prefill or
+    decode continuation; returns updated cache.
+
+    ssd_fn: optional override of the chunked SSD implementation (used to
+    swap in the Pallas kernel).
+    """
+    B, T, d = x.shape
+    dinner = cfg.ssm_d_inner
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    ssd = ssd_fn or ssd_chunked
+    if ssd_fn is None:
+        from repro.models import attention as _attn
+        if _attn._USE_KERNELS:
+            from repro.kernels.ssd_scan.ops import ssd_scan as ssd
+
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    z, xBC, dt_raw = jnp.split(
+        zxbcdt, [dinner, dinner + conv_channels(cfg)], axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, Bmat, Cmat = jnp.split(xBC, [dinner, dinner + G * N], axis=-1)
+    xs = xs.reshape(B, T, H, P)
+    Bmat = Bmat.reshape(B, T, G, N)
+    Cmat = Cmat.reshape(B, T, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    init_state = cache["ssm"] if cache is not None else None
+    if T == 1:
+        st = init_state if init_state is not None else jnp.zeros(
+            (B, H, P, N), jnp.float32)
+        y, new_state = ssd_decode_step(
+            xs[:, 0], dt[:, 0], A, Bmat[:, 0], Cmat[:, 0], st)
+        y = y[:, None]
+    else:
+        chunk = min(cfg.ssm_chunk, T)
+        while T % chunk != 0:
+            chunk //= 2
+        y, new_state = ssd(xs, dt.astype(x.dtype), A, Bmat, Cmat,
+                           chunk, init_state)
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, T, dinner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": new_state}
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_channels(cfg)), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                          cfg.ssm_state), jnp.float32),
+    }

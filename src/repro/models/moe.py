@@ -1,0 +1,97 @@
+"""Mixture-of-experts FFN with capacity-based expert-parallel dispatch.
+
+Two dispatch strategies, both FLOP-faithful to *active* parameters:
+
+* per-row dispatch (prefill / training, T large): tokens of each batch
+  row are dispatched independently — position-in-expert cumsums run over
+  the sequence axis only, so the token axis shards cleanly over the
+  ``data`` mesh axis with no cross-device cumsum.  Grouped activations
+  ``[B, E, C, d]`` shard E over ``model`` (expert parallelism).
+* global dispatch (decode, T == 1): tokens are flattened across the
+  batch; capacity C = ceil(B·k/E·cf) keeps the expert einsum at
+  ~active-FLOPs instead of dense all-expert compute.
+
+Capacity overflow drops tokens (standard "dropping" MoE); dropped tokens
+fall through to the residual connection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+
+def init_moe(key, cfg):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    ks = split_keys(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, f), cfg.param_dtype),
+        "w_up": dense_init(ks[2], (E, d, f), cfg.param_dtype),
+        "w_down": dense_init(ks[3], (E, f, d), cfg.param_dtype),
+    }
+
+
+def _route(p, cfg, x):
+    """x [..., d] -> (weights [..., k], idx [..., k], aux_loss scalar)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"])
+    k = cfg.top_k
+    vals, idx = jax.lax.top_k(logits, k)
+    weights = jax.nn.softmax(vals, axis=-1)
+    # load-balance auxiliary loss (Switch-style)
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs.reshape(-1, cfg.num_experts), axis=0)
+    onehot = jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(onehot, axis=-2).reshape(-1, cfg.num_experts),
+                  axis=0) / k
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return weights, idx, aux
+
+
+def _expert_ffn(p, xg):
+    """xg [..., E, C, d] -> [..., E, C, d] via per-expert SwiGLU."""
+    g = jnp.einsum("...ecd,edf->...ecf", xg, p["w_gate"])
+    u = jnp.einsum("...ecd,edf->...ecf", xg, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xg.dtype) * u
+    return jnp.einsum("...ecf,efd->...ecd", h, p["w_down"])
+
+
+def _dispatch_combine(p, cfg, xt, weights, idx, capacity: int):
+    """Dispatch tokens xt [N, d] with routing (weights/idx [N, k]) into
+    grouped [E, C, d], run experts, combine back to [N, d]."""
+    N, d = xt.shape
+    E, k = cfg.num_experts, cfg.top_k
+    fe = idx.reshape(N * k)                             # expert of each slot
+    fw = weights.reshape(N * k)
+    tok = jnp.repeat(jnp.arange(N), k)
+    onehot = jax.nn.one_hot(fe, E, dtype=jnp.int32)     # [N*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot           # position in expert
+    pie = jnp.sum(pos * onehot, axis=1)                 # [N*k]
+    keep = pie < capacity
+    pie_c = jnp.minimum(pie, capacity - 1)
+    xg = jnp.zeros((E, capacity, d), xt.dtype)
+    contrib = xt[tok] * keep[:, None].astype(xt.dtype)
+    xg = xg.at[fe, pie_c].add(contrib)
+    yg = _expert_ffn(p, xg)
+    yflat = yg[fe, pie_c] * (fw * keep)[:, None].astype(xt.dtype)
+    out = jnp.zeros((N, d), xt.dtype).at[tok].add(yflat)
+    return out
+
+
+def moe_ffn(p, cfg, x):
+    """x [B, T, d] -> (out [B, T, d], aux_loss)."""
+    B, T, d = x.shape
+    weights, idx, aux = _route(p, cfg, x)
+    weights = weights.astype(x.dtype)
+    E, k, cf = cfg.num_experts, cfg.top_k, cfg.capacity_factor
+    if T == 1:
+        capacity = max(1, int(-(-B * k * cf // E)))
+        out = _dispatch_combine(p, cfg, x[:, 0], weights[:, 0], idx[:, 0],
+                                capacity)
+        return out[:, None], aux
+    capacity = max(1, int(-(-T * k * cf // E)))
+    out = jax.vmap(
+        lambda xr, wr, ir: _dispatch_combine(p, cfg, xr, wr, ir, capacity)
+    )(x, weights, idx)
+    return out, aux

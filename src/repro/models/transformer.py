@@ -1,0 +1,438 @@
+"""Unified decoder stack assembling all block types, with scan-over-periods.
+
+Entry points (all functional, pure JAX):
+
+  init_params(key, cfg)                     -> params pytree
+  init_cache(cfg, batch, max_seq, dtype)    -> cache pytree (None entries for
+                                               cache-free blocks)
+  forward(params, cfg, tokens, positions, cache, ...) -> (logits, cache, aux)
+
+Modes:
+  train / full-context:  cache=None, T = full sequence, causal in-chunk.
+  chunked prefill:       cache given, T = chunk size, writes KV at positions.
+  decode:                cache given, T = 1.
+
+The layer stack is organised as ``cfg.segments()``: each segment scans
+over ``n_periods`` repetitions of a block pattern, with per-period params
+and caches as scan xs/ys.  This keeps HLO size independent of depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import config as cfg_lib
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_lib
+from repro.models.common import dense_init, init_mlp, mlp, rms_norm, split_keys
+from repro.models.config import (ATTN, ATTN_LOCAL, DEC, ENC, MAMBA2, MOE,
+                                 ZAMBA_ATTN, ModelConfig, Segment)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, btype: str):
+    d = cfg.d_model
+    ks = split_keys(key, 6)
+    zeros = lambda: jnp.zeros((d,), cfg.param_dtype)
+    if btype in (ATTN, ATTN_LOCAL, ENC):
+        return {"ln1": zeros(), "attn": attn_lib.init_attention(ks[0], cfg),
+                "ln2": zeros(), "mlp": init_mlp(ks[1], d, cfg.d_ff,
+                                                cfg.param_dtype)}
+    if btype == MOE:
+        p = {"ln1": zeros(), "attn": attn_lib.init_attention(ks[0], cfg),
+             "ln2": zeros(), "moe": moe_lib.init_moe(ks[1], cfg)}
+        if cfg.dense_residual:
+            p["dense_mlp"] = init_mlp(ks[2], d, cfg.d_ff, cfg.param_dtype)
+        return p
+    if btype in (MAMBA2, ZAMBA_ATTN):
+        p = {"ln1": zeros(), "mixer": m2.init_mamba2(ks[0], cfg)}
+        if cfg.d_ff > 0:
+            p["ln2"] = zeros()
+            p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.param_dtype)
+        if btype == ZAMBA_ATTN:
+            p["ln_attn"] = zeros()
+        return p
+    if btype == DEC:
+        return {"ln1": zeros(), "attn": attn_lib.init_attention(ks[0], cfg),
+                "ln_x": zeros(),
+                "xattn": attn_lib.init_cross_attention(ks[1], cfg),
+                "ln2": zeros(), "mlp": init_mlp(ks[2], d, cfg.d_ff,
+                                                cfg.param_dtype)}
+    raise ValueError(btype)
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = split_keys(key, 8 + len(cfg.segments()))
+    d, V = cfg.d_model, cfg.vocab_size
+    params = {
+        "embed": dense_init(ks[0], (V, d), cfg.param_dtype, scale=1.0),
+        "lm_head": dense_init(ks[1], (d, V), cfg.param_dtype),
+        "final_norm": jnp.zeros((d,), cfg.param_dtype),
+    }
+    if cfg.family == "hybrid":
+        params["shared_attn"] = attn_lib.init_attention(ks[2], cfg)
+    if cfg.family == "vlm":
+        params["projector"] = dense_init(ks[3], (cfg.vision_dim, d),
+                                         cfg.param_dtype)
+    segs = []
+    for si, seg in enumerate(cfg.segments()):
+        kseg = ks[8 + si]
+        pos_params = []
+        for pi, btype in enumerate(seg.pattern):
+            kpos = jax.random.fold_in(kseg, pi)
+            stacked = jax.vmap(
+                lambda k: _init_block(k, cfg, btype)
+            )(jax.random.split(kpos, seg.n_periods))
+            pos_params.append(stacked)
+        segs.append(tuple(pos_params))
+    params["segments"] = tuple(segs)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter shapes without allocation (for the dry-run)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, btype: str, batch: int, max_seq: int,
+                 cross_len: int, dtype):
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    kv = lambda s: {"k": jnp.zeros((batch, s, hkv, dh), dtype),
+                    "v": jnp.zeros((batch, s, hkv, dh), dtype)}
+    if btype == ATTN:
+        return kv(max_seq)
+    if btype == ATTN_LOCAL:
+        return kv(min(cfg.sliding_window or max_seq, max_seq))
+    if btype == MOE:
+        return kv(max_seq)
+    if btype == MAMBA2:
+        return m2.init_mamba2_cache(cfg, batch, dtype)
+    if btype == ZAMBA_ATTN:
+        c = m2.init_mamba2_cache(cfg, batch, dtype)
+        c.update(kv(max_seq))
+        return c
+    if btype == DEC:
+        c = kv(max_seq)
+        c["ck"] = jnp.zeros((batch, cross_len, hkv, dh), dtype)
+        c["cv"] = jnp.zeros((batch, cross_len, hkv, dh), dtype)
+        return c
+    if btype == ENC:
+        return None
+    raise ValueError(btype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None,
+               cross_len: int = 0):
+    dtype = dtype or cfg.param_dtype
+    segs = []
+    for seg in cfg.segments():
+        pos_caches = []
+        for btype in seg.pattern:
+            c = _block_cache(cfg, btype, batch, max_seq, cross_len, dtype)
+            if c is not None:
+                c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (seg.n_periods,) + a.shape), c)
+            pos_caches.append(c)
+        segs.append(tuple(pos_caches))
+    return {"segments": tuple(segs)}
+
+
+def abstract_cache(cfg, batch, max_seq, dtype=None, cross_len: int = 0):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_seq, dtype, cross_len))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _apply_block(btype, bp, cfg, x, positions, cache, shared_attn, enc_out):
+    """Returns (x, new_cache, aux_loss)."""
+    from repro.distributed import hints
+    x = hints.constrain_tokens(x)
+    aux = jnp.zeros((), jnp.float32)
+    if btype in (ATTN, ATTN_LOCAL, ENC):
+        window = cfg.sliding_window if btype == ATTN_LOCAL else 0
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        if btype == ENC:
+            # bidirectional: no mask beyond validity
+            q, k, v = attn_lib._project_qkv(bp["attn"], cfg, h)
+            q = attn_lib.apply_rope(q, positions, cfg.rope_theta)
+            k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+            scores = attn_lib._gqa_scores(q, k)
+            probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+            a = attn_lib._gqa_out(probs.astype(x.dtype), v, bp["attn"]["wo"])
+            nc = None
+        else:
+            a, nc = attn_lib.self_attention(bp["attn"], cfg, h, positions,
+                                            cache, window=window)
+        x = x + a
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + mlp(bp["mlp"], h)
+        return x, nc, aux
+    if btype == MOE:
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        a, nc = attn_lib.self_attention(bp["attn"], cfg, h, positions, cache)
+        x = x + a
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        mo, aux = moe_lib.moe_ffn(bp["moe"], cfg, h)
+        if cfg.dense_residual:
+            mo = mo + mlp(bp["dense_mlp"], h)
+        x = x + mo
+        return x, nc, aux
+    if btype in (MAMBA2, ZAMBA_ATTN):
+        new_cache = dict(cache) if cache is not None else None
+        if btype == ZAMBA_ATTN:
+            h = rms_norm(x, bp["ln_attn"], cfg.norm_eps)
+            kvc = ({"k": cache["k"], "v": cache["v"]}
+                   if cache is not None else None)
+            a, nkv = attn_lib.self_attention(shared_attn, cfg, h, positions,
+                                             kvc)
+            x = x + a
+            if new_cache is not None:
+                new_cache.update(nkv)
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        mcache = ({"conv": cache["conv"], "ssm": cache["ssm"]}
+                  if cache is not None else None)
+        mo, nmc = m2.mamba2_block(bp["mixer"], cfg, h, mcache)
+        x = x + mo
+        if new_cache is not None:
+            new_cache.update(nmc)
+        if cfg.d_ff > 0 and "mlp" in bp:
+            h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            x = x + mlp(bp["mlp"], h)
+        return x, new_cache, aux
+    if btype == DEC:
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        kvc = ({"k": cache["k"], "v": cache["v"]}
+               if cache is not None else None)
+        a, nkv = attn_lib.self_attention(bp["attn"], cfg, h, positions, kvc)
+        x = x + a
+        h = rms_norm(x, bp["ln_x"], cfg.norm_eps)
+        if enc_out is not None:
+            ckv = attn_lib.project_cross_kv(bp["xattn"], cfg, enc_out)
+        else:
+            ckv = {"k": cache["ck"], "v": cache["cv"]}
+        x = x + attn_lib.cross_attention(bp["xattn"], cfg, h, ckv)
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + mlp(bp["mlp"], h)
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(nkv)
+            new_cache["ck"] = ckv["k"].astype(cache["ck"].dtype)
+            new_cache["cv"] = ckv["v"].astype(cache["cv"].dtype)
+        return x, new_cache, aux
+    raise ValueError(btype)
+
+
+def _run_segment(seg: Segment, seg_params, cfg, x, positions, seg_cache,
+                 shared_attn, enc_out, use_remat: bool):
+    """Scan over the segment's periods."""
+
+    cache_present = tuple(
+        seg_cache is not None and seg_cache[i] is not None
+        for i in range(len(seg.pattern)))
+    has_cache = any(cache_present)
+
+    # The cache rides in the scan CARRY and is updated in place with
+    # dynamic_update_slice at the current period index: XLA aliases
+    # while-loop state, so only ONE copy of the stacked cache is live.
+    # (Threading it as xs -> ys keeps input and output stacks alive
+    # simultaneously — measured as a full extra cache copy per segment.)
+    def body(carry, xs):
+        x, aux, cache_stack = carry
+        p_params, idx = xs
+        new_stack = []
+        for i, btype in enumerate(seg.pattern):
+            if cache_present[i]:
+                c = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, idx, 0, keepdims=False), cache_stack[i])
+            else:
+                c = None
+            x, nc, block_aux = _apply_block(btype, p_params[i], cfg, x,
+                                            positions, c, shared_attn,
+                                            enc_out)
+            aux = aux + block_aux
+            if cache_present[i]:
+                new_stack.append(jax.tree.map(
+                    lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                        a, n.astype(a.dtype), idx, 0),
+                    cache_stack[i], nc))
+            else:
+                new_stack.append(cache_stack[i])
+        return (x, aux, tuple(new_stack)), ()
+
+    if use_remat:
+        body = jax.checkpoint(body)
+
+    carry_cache = tuple(
+        c if cache_present[i] else 0
+        for i, c in enumerate(seg_cache if seg_cache is not None
+                              else [None] * len(seg.pattern)))
+    idxs = jnp.arange(seg.n_periods, dtype=jnp.int32)
+    (x, aux, carry_cache), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), carry_cache),
+        (seg_params, idxs), unroll=cfg.scan_unroll)
+    new_caches = None
+    if has_cache:
+        new_caches = tuple(
+            c if cache_present[i] else None
+            for i, c in enumerate(carry_cache))
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, cache=None, *,
+            image_embeds=None, audio_embeds=None, compute_logits=True):
+    """tokens: [B, T] int32.  positions: [B, T] absolute positions (defaults
+    to arange).  cache: from init_cache, or None for train/full-context.
+
+    image_embeds: [B, S_img, vision_dim] (vlm prefill) — prepended.
+    audio_embeds: [B, S_frames, d_model] (audio prefill) — encoder input.
+
+    Returns (logits [B, T', V] or hidden, new_cache, aux_loss).
+    """
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if image_embeds is not None:
+        img = jnp.einsum("bsv,vd->bsd",
+                         image_embeds.astype(cfg.param_dtype),
+                         params["projector"])
+        x = jnp.concatenate([img, x.astype(img.dtype)], axis=1)
+    T = x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                     (B, T))
+    shared_attn = params.get("shared_attn")
+    use_remat = cfg.remat and cache is None
+
+    segments = cfg.segments()
+    new_seg_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    enc_out = None
+
+    for si, seg in enumerate(segments):
+        seg_params = params["segments"][si]
+        seg_cache = cache["segments"][si] if cache is not None else None
+        if seg.pattern == (cfg_lib.ENC,):
+            # encoder path: runs over audio embeddings, not x
+            if audio_embeds is None:
+                new_seg_caches.append(seg_cache)
+                continue
+            a = audio_embeds.astype(cfg.param_dtype)
+            apos = jnp.broadcast_to(
+                jnp.arange(a.shape[1], dtype=jnp.int32)[None],
+                (B, a.shape[1]))
+            enc_out, _, _ = _run_segment(seg, seg_params, cfg, a, apos, None,
+                                         shared_attn, None, use_remat)
+            new_seg_caches.append(seg_cache)
+            continue
+        x, ncache, aux = _run_segment(seg, seg_params, cfg, x, positions,
+                                      seg_cache, shared_attn, enc_out,
+                                      use_remat)
+        aux_total = aux_total + aux
+        new_seg_caches.append(ncache)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out = x
+    if compute_logits:
+        out = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"segments": tuple(new_seg_caches)}
+    return out, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Convenience entry points used by engine / launchers
+# ---------------------------------------------------------------------------
+
+def train_loss(params, cfg: ModelConfig, batch):
+    """batch: {tokens [B,T], labels [B,T], (optional) image_embeds,
+    audio_embeds, loss_mask}."""
+    logits, _, aux = forward(
+        params, cfg, batch["tokens"],
+        image_embeds=batch.get("image_embeds"),
+        audio_embeds=batch.get("audio_embeds"))
+    labels = batch["labels"]
+    # vlm: logits cover [img ; text]; score only the text tail
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]
+    from repro.models.common import softmax_xent
+    loss = softmax_xent(logits[:, :-1], labels[:, 1:],
+                        batch.get("loss_mask", None))
+    return loss + 0.01 * aux
+
+
+def prefill(params, cfg, tokens, cache, start_pos, **kw):
+    """Chunked prefill: write tokens at start_pos.., return last logits."""
+    B, T = tokens.shape
+    if kw.get("image_embeds") is not None:
+        T += kw["image_embeds"].shape[1]  # image tokens are prepended
+    positions = start_pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    logits, cache, _ = forward(params, cfg, tokens, positions, cache, **kw)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg, tokens, cache, pos, **kw):
+    """tokens [B,1]; pos [B] absolute position of the new token."""
+    logits, cache, _ = forward(params, cfg, tokens, pos[:, None], cache, **kw)
+    return logits[:, -1], cache
+
+
+def full_prefill(params, cfg, tokens, cache, chunk_size: int, *,
+                 image_embeds=None, audio_embeds=None):
+    """Prefill a full prompt as a scan over chunked-prefill steps —
+    exactly what a production instance executes, with memory bounded by
+    one chunk's attention scores instead of O(S^2).
+
+    The first chunk carries the modality embeddings (VLM patches compute
+    alongside it; the audio encoder runs once and populates the cross-KV
+    cache).  Requires (text) S % chunk_size == 0.
+
+    Returns (last_logits [B, V], cache).
+    """
+    B, S = tokens.shape
+    assert S % chunk_size == 0, (S, chunk_size)
+    n_chunks = S // chunk_size
+
+    # chunk 0 carries image/audio embeds
+    first = tokens[:, :chunk_size]
+    start0 = jnp.zeros((B,), jnp.int32)
+    last, cache = prefill(params, cfg, first, cache, start0,
+                          image_embeds=image_embeds,
+                          audio_embeds=audio_embeds)
+    if n_chunks == 1:
+        return last, cache
+    offset = chunk_size + (image_embeds.shape[1]
+                           if image_embeds is not None else 0)
+    rest = tokens[:, chunk_size:].reshape(B, n_chunks - 1, chunk_size)
+    rest = jnp.moveaxis(rest, 1, 0)                  # [n-1, B, C]
+
+    def body(cache, inp):
+        i, chunk = inp
+        start = jnp.full((B,), offset, jnp.int32) + i * chunk_size
+        lg, cache = prefill(params, cfg, chunk, cache, start)
+        return cache, lg
+
+    idx = jnp.arange(n_chunks - 1, dtype=jnp.int32)
+    cache, lgs = jax.lax.scan(body, cache, (idx, rest),
+                              unroll=cfg.scan_unroll)
+    return lgs[-1], cache

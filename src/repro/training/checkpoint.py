@@ -1,0 +1,77 @@
+"""Checkpointing: save/restore params + optimizer state as a flat .npz
+(no orbax offline).  Tree structure is reconstructed from the config, so
+a checkpoint restores exactly onto a freshly-initialized model."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optimizer import OptState
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state: Optional[OptState] = None,
+                    meta: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {"params/" + k: v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        arrays["opt/step"] = np.asarray(opt_state.step)
+        arrays.update({"opt/m/" + k: v
+                       for k, v in _flatten(opt_state.m).items()})
+        arrays.update({"opt/v/" + k: v
+                       for k, v in _flatten(opt_state.v).items()})
+    np.savez(path, **arrays)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2)
+
+
+def _unflatten_into(template, flat, prefix):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, tuple):
+        return tuple(_unflatten_into(v, flat, f"{prefix}{i}/")
+                     for i, v in enumerate(template))
+    if isinstance(template, list):
+        return [_unflatten_into(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+    arr = flat[prefix.rstrip("/")]
+    return jnp.asarray(arr, dtype=template.dtype)
+
+
+def load_checkpoint(path: str, params_template,
+                    opt_template: Optional[OptState] = None):
+    data = np.load(path)
+    flat = {k: data[k] for k in data.files}
+    pflat = {k[len("params/"):]: v for k, v in flat.items()
+             if k.startswith("params/")}
+    params = _unflatten_into(params_template, pflat, "")
+    opt_state = None
+    if opt_template is not None and "opt/step" in flat:
+        mflat = {k[len("opt/m/"):]: v for k, v in flat.items()
+                 if k.startswith("opt/m/")}
+        vflat = {k[len("opt/v/"):]: v for k, v in flat.items()
+                 if k.startswith("opt/v/")}
+        opt_state = OptState(
+            step=jnp.asarray(flat["opt/step"]),
+            m=_unflatten_into(opt_template.m, mflat, ""),
+            v=_unflatten_into(opt_template.v, vflat, ""))
+    return params, opt_state

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); keep any user XLA_FLAGS from leaking in
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

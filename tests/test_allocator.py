@@ -1,0 +1,79 @@
+"""Property-based tests (hypothesis) for the paged-KV block allocator and
+slot table invariants — the substrate Algorithm 1's watermark reads."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.engine.kvcache import BlockAllocator, OutOfBlocks, SlotTable
+
+
+ops = st.lists(
+    st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+              st.integers(0, 15),            # rid
+              st.integers(1, 600)),          # tokens
+    min_size=1, max_size=200)
+
+
+@given(ops=ops, num_blocks=st.integers(4, 64),
+       block_size=st.integers(1, 32))
+@settings(max_examples=200, deadline=None)
+def test_allocator_invariants(ops, num_blocks, block_size):
+    a = BlockAllocator(num_blocks, block_size)
+    shadow = {}                                   # rid -> blocks held
+    for op, rid, tokens in ops:
+        need = a.blocks_for(tokens)
+        if op == "alloc":
+            if rid in shadow:
+                continue
+            if need <= a.free_blocks:
+                a.allocate(rid, tokens)
+                shadow[rid] = need
+            else:
+                try:
+                    a.allocate(rid, tokens)
+                    assert False, "allocate should have raised"
+                except OutOfBlocks:
+                    pass
+        elif op == "extend":
+            if rid not in shadow:
+                continue
+            if a.can_extend(rid, tokens):
+                a.extend(rid, tokens)
+                shadow[rid] = max(shadow[rid], need)
+        else:
+            freed = a.free(rid)
+            assert freed == shadow.pop(rid, 0)
+        # global invariants after every op
+        assert a.used_blocks == sum(shadow.values())
+        assert a.free_blocks + a.used_blocks == num_blocks
+        assert 0 <= a.utilization() <= 1.0
+
+
+@given(ops=st.lists(st.tuples(st.booleans(), st.integers(0, 20)),
+                    min_size=1, max_size=100),
+       n_slots=st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_slot_table_invariants(ops, n_slots):
+    t = SlotTable(n_slots)
+    held = {}
+    for acquire, rid in ops:
+        if acquire:
+            if rid in held or t.free_slots == 0:
+                continue
+            s = t.acquire(rid)
+            assert s not in held.values(), "slot double-assigned"
+            assert 0 <= s < n_slots
+            held[rid] = s
+        else:
+            s = t.release(rid)
+            if rid in held:
+                assert s == held.pop(rid)
+            else:
+                assert s is None
+        assert t.free_slots == n_slots - len(held)
+
+
+@given(tokens=st.integers(1, 10_000), bs=st.integers(1, 64))
+def test_blocks_for_covers_tokens(tokens, bs):
+    a = BlockAllocator(1, bs)
+    assert a.blocks_for(tokens) * bs >= tokens
+    assert (a.blocks_for(tokens) - 1) * bs < tokens

@@ -1,0 +1,43 @@
+"""Offline slider search (paper §3.1) + early rejection (paper §3.4)."""
+import pytest
+
+from repro.core.autotune import search_sliders
+from repro.core.latency import SLO, attainment
+from repro.core.policies import Sliders
+from repro.engine.request import State
+from repro.sim.simulator import ServingConfig, run_sim
+from repro.sim.workload import SHAREGPT
+
+
+def test_offline_search_returns_valid_sliders():
+    slo = SLO(ttft=1.5, tpot=0.030)
+    res = search_sliders(
+        "qwen2.5-14b", slo, SHAREGPT, qps_grid=[60, 100],
+        n_requests=60,
+        ratios=[(2, 2)], sp_grid=[1024], sd_grid=[128, 256, 1024])
+    assert res.sliders.n_p + res.sliders.n_d == 4
+    assert res.sliders.s_d <= res.sliders.s_p
+    assert res.goodput >= 0
+    assert len(res.trials) == 3
+    # the searched config must be at least as good as every trial
+    assert all(res.goodput >= g for _, g in res.trials)
+
+
+def test_early_rejection_drops_infeasible_requests():
+    # impossible TTFT -> every request rejected at the proxy
+    slo = SLO(ttft=1e-6, tpot=10.0)
+    sc = ServingConfig(policy="taichi", sliders=Sliders(2, 2, 1024, 256))
+    st = run_sim(sc, slo, SHAREGPT, qps=10.0, n_requests=30,
+                 taichi_flags={"early_rejection": True})
+    rejected = [r for r in st.reqs if r.state == State.REJECTED]
+    assert rejected, "expected early rejections under impossible TTFT"
+    # rejected requests count as SLO violations
+    assert st.slo_attainment < 1.0
+
+
+def test_no_rejection_by_default():
+    slo = SLO(ttft=1e-6, tpot=10.0)
+    sc = ServingConfig(policy="taichi", sliders=Sliders(2, 2, 1024, 256))
+    st = run_sim(sc, slo, SHAREGPT, qps=10.0, n_requests=30)
+    assert all(r.state != State.REJECTED for r in st.reqs)
+    assert all(r.state == State.FINISHED for r in st.reqs)

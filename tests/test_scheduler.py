@@ -1,0 +1,211 @@
+"""Unit + property tests for the paper's two algorithms and the policy
+corner cases (TaiChi sliders recover aggregation / disaggregation)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core import flowing
+from repro.core.estimator import CostModel
+from repro.core.hw import InstanceSpec
+from repro.core.instance import D_HEAVY, P_HEAVY, Instance
+from repro.core.latency import SLO
+from repro.core.policies import Sliders
+from repro.core.proxy import Proxy
+from repro.engine.engine import SimExecutor
+from repro.engine.request import Request
+from repro.sim.simulator import ServingConfig, build_cluster, run_sim
+from repro.sim.workload import SHAREGPT
+
+COST = CostModel(get_config("qwen2.5-14b"), InstanceSpec(tp=4))
+
+
+def _inst(iid=0, itype=D_HEAVY, chunk=256, blocks=64, block_size=16):
+    return Instance(iid, itype, chunk, COST, SimExecutor(),
+                    hbm_blocks=blocks, block_size=block_size)
+
+
+def _decoding_request(inst, prompt=100, out_len=5, now=0.0):
+    r = Request(prompt_len=prompt, max_new_tokens=512,
+                hidden_output_len=400)
+    r.prefill_pos = prompt
+    r.output_len = out_len
+    r.first_token_time = now
+    r.tpot_reset_time = now
+    r.last_token_time = now + 0.02 * max(out_len - 1, 0)
+    inst.allocator.allocate(r.rid, r.context_len)
+    inst.decoding[r.rid] = r
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+def test_degrade_selects_longest_first_until_watermark():
+    inst = _inst(blocks=100)
+    reqs = [_decoding_request(inst, prompt=200, out_len=o)
+            for o in (3, 50, 20, 40)]
+    # usage: 4 * ceil((200+o)/16) blocks ~ 52 blocks; set watermark low to
+    # force exactly the two longest out
+    used = inst.allocator.used_blocks
+    two_longest = sorted(reqs, key=lambda r: -r.output_len)[:2]
+    release = sum(inst.allocator.blocks_for(r.context_len)
+                  for r in two_longest)
+    watermark = (used - release + 1) / 100
+    selected = flowing.select_degrade(inst, watermark)
+    assert [r.rid for r in selected] == [r.rid for r in two_longest]
+
+
+def test_degrade_noop_below_watermark():
+    inst = _inst(blocks=1000)
+    _decoding_request(inst)
+    assert flowing.select_degrade(inst, 0.95) == []
+
+
+def test_degrade_ranks_on_effective_length_after_backflow():
+    inst = _inst(blocks=100)
+    a = _decoding_request(inst, out_len=50)
+    b = _decoding_request(inst, out_len=30)
+    a.tpot_reset_len = 45          # a flowed back recently -> effective 5
+    sel = flowing.select_degrade(inst, watermark=0.01)
+    assert sel[0].rid == b.rid, "backflowed request must rank as 'new'"
+
+
+def test_backflow_selects_requests_near_tpot_slo():
+    inst = _inst(itype=P_HEAVY)
+    slo_tpot = 0.1
+    fast = _decoding_request(inst, out_len=10)       # tpot 0.02
+    slow = _decoding_request(inst, out_len=10)
+    slow.last_token_time = slow.tpot_reset_time + 0.097 * 9  # tpot 0.097
+    out = flowing.select_backflow(inst, slo_tpot, alpha=0.96, now=1.0)
+    assert [r.rid for r in out] == [slow.rid]
+
+
+def test_backflow_ignores_reset_window():
+    """After a reset the request is 'new': early post-reset TPOT spikes
+    with n<=1 must not trigger re-backflow."""
+    inst = _inst(itype=P_HEAVY)
+    r = _decoding_request(inst, out_len=20)
+    r.reset_tpot_window()
+    assert r.current_tpot(now=2.0) is None
+    assert flowing.select_backflow(inst, 0.1, 0.96, 2.0) == []
+
+
+@given(outs=st.lists(st.integers(0, 500), min_size=1, max_size=12),
+       watermark=st.floats(0.01, 0.99))
+@settings(max_examples=100, deadline=None)
+def test_degrade_property(outs, watermark):
+    """Property: after removing the selected set, usage <= watermark or
+    nothing left to remove; selection is longest-first by effective len."""
+    inst = _inst(blocks=max(len(outs) * 40, 60))
+    reqs = [_decoding_request(inst, prompt=100, out_len=o) for o in outs]
+    sel = flowing.select_degrade(inst, watermark)
+    sel_ids = [r.rid for r in sel]
+    assert len(sel_ids) == len(set(sel_ids))
+    removed = sum(inst.allocator.blocks_for(r.context_len) for r in sel)
+    remaining = inst.allocator.used_blocks - removed
+    if len(sel) < len(reqs):
+        assert remaining <= watermark * inst.allocator.num_blocks
+    # longest-first: selected set = top-k by effective output length
+    ranked = sorted(reqs, key=lambda r: -r.effective_output_len)
+    top = {r.rid for r in ranked[:len(sel)]}
+    # ties can reorder; compare multisets of lengths instead
+    assert sorted((r.effective_output_len for r in sel), reverse=True) == \
+        sorted((r.effective_output_len for r in ranked[:len(sel)]),
+               reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+# ---------------------------------------------------------------------------
+
+def test_prefill_prefers_feasible_min_queue():
+    p_inst = _inst(0, P_HEAVY, chunk=1024, blocks=4096)
+    d_inst = _inst(1, D_HEAVY, chunk=256, blocks=4096)
+    proxy = Proxy([p_inst, d_inst], COST, ttft_slo=30.0)
+    # short request: both feasible; D-heavy has fewer queued tokens -> D
+    short = Request(prompt_len=128, max_new_tokens=64)
+    chosen = proxy.schedule_prefill(short, now=0.0)
+    assert chosen is d_inst, "short prefill should degrade onto D-heavy"
+
+
+def test_prefill_long_request_goes_to_p_heavy_under_tight_slo():
+    p_inst = _inst(0, P_HEAVY, chunk=2048, blocks=4096)
+    d_inst = _inst(1, D_HEAVY, chunk=128, blocks=4096)
+    # preload D-heavy queue so its Q makes long requests infeasible
+    for _ in range(4):
+        d_inst.enqueue_prefill(Request(prompt_len=4000, max_new_tokens=8))
+    tight = COST.prefill_time(8000, 2048) * 2.5
+    proxy = Proxy([p_inst, d_inst], COST, ttft_slo=tight)
+    long_req = Request(prompt_len=8000, max_new_tokens=64)
+    chosen = proxy.schedule_prefill(long_req, now=0.0)
+    assert chosen is p_inst
+
+
+def test_prefill_random_fallback_when_infeasible():
+    p_inst = _inst(0, P_HEAVY, chunk=1024)
+    proxy = Proxy([p_inst], COST, ttft_slo=1e-9)
+    r = Request(prompt_len=4096, max_new_tokens=8)
+    chosen = proxy.schedule_prefill(r, now=0.0)
+    assert chosen is p_inst
+    assert proxy.infeasible_count == 1
+
+
+def test_pure_decode_instance_never_prefils():
+    d0 = _inst(0, D_HEAVY, chunk=0)
+    p0 = _inst(1, P_HEAVY, chunk=1024)
+    proxy = Proxy([d0, p0], COST, ttft_slo=60.0)
+    for _ in range(5):
+        chosen = proxy.schedule_prefill(
+            Request(prompt_len=512, max_new_tokens=8), now=0.0)
+        assert chosen is p0
+
+
+def test_decode_placement_in_place_on_dheavy():
+    p0 = _inst(0, P_HEAVY, 1024)
+    d0 = _inst(1, D_HEAVY, 256)
+    d1 = _inst(2, D_HEAVY, 256)
+    proxy = Proxy([p0, d0, d1], COST, 10.0)
+    r = Request(prompt_len=100, max_new_tokens=8)
+    assert proxy.place_decode(r, d0, [d0, d1]) is d0      # in-place
+    d0.allocator.allocate(999, 800)                        # load d0
+    assert proxy.place_decode(r, p0, [d0, d1]) is d1      # least loaded
+
+
+# ---------------------------------------------------------------------------
+# Policy corner cases (sliders recover the two baselines)
+# ---------------------------------------------------------------------------
+
+def test_sliders_recover_baselines():
+    slo = SLO(ttft=2.0, tpot=0.05)
+    # TaiChi with s_d == s_p behaves like aggregation: every instance has
+    # identical capability, so both baselines' instances match chunk sizes
+    sc = ServingConfig(policy="aggregation",
+                       sliders=Sliders(2, 2, 1024, 1024))
+    cl = build_cluster(sc, slo)
+    assert all(i.chunk_size == 1024 for i in cl.instances)
+    assert len(cl.instances) == 4
+    sc = ServingConfig(policy="disaggregation",
+                       sliders=Sliders(2, 2, 0, 0))
+    cl = build_cluster(sc, slo)
+    p = [i for i in cl.instances if i.itype == P_HEAVY]
+    d = [i for i in cl.instances if i.itype == D_HEAVY]
+    assert all(i.chunk_size >= sc.max_ctx for i in p), \
+        "disagg P instances prefill whole prompts (no chunking)"
+    assert all(i.chunk_size == 0 for i in d), \
+        "disagg D instances never prefill"
+
+
+def test_preemption_recovers_from_memory_deadlock():
+    inst = _inst(blocks=40)
+    # context exactly at a block boundary so the next token needs a fresh
+    # block, which is unavailable -> all decodes stall -> deadlock
+    reqs = [_decoding_request(inst, prompt=155, out_len=5)
+            for _ in range(3)]
+    # exhaust memory so extends fail
+    while inst.allocator.free_blocks > 0:
+        inst.allocator.allocate(10_000 + inst.allocator.free_blocks, 16)
+    dur, done, fin = inst.run_iteration(0.0)
+    assert inst.preemptions >= 1
+    assert inst.prefill_queue or inst.decoding

@@ -1,0 +1,75 @@
+"""Training substrate: optimizer math, convergence, checkpoint roundtrip."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import transformer as tf
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      global_norm, init_opt_state, schedule)
+from repro.training.train import train_loop
+
+
+def test_adamw_first_step_is_signed_lr():
+    """After one step with beta-corrected moments, |delta| ~ lr for a
+    constant gradient (AdamW property)."""
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.0, warmup_steps=0,
+                      clip_norm=1e9)
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 0.5)}
+    state = init_opt_state(params)
+    new_p, state, gnorm = adamw_update(cfg, params, grads, state)
+    delta = np.asarray(params["w"] - new_p["w"])
+    np.testing.assert_allclose(delta, 1e-2, rtol=1e-4)
+    assert float(gnorm) == pytest.approx(0.5 * 4, rel=1e-5)
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros((8,))}
+    grads = {"w": jnp.full((8,), 100.0)}
+    state = init_opt_state(params)
+    _, state, gnorm = adamw_update(cfg, params, grads, state)
+    # clipped moments: m = (1-b1) * g * scale, scale = 1/gnorm
+    scale = 1.0 / float(gnorm)
+    np.testing.assert_allclose(np.asarray(state.m["w"]),
+                               0.1 * 100.0 * scale, rtol=1e-4)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.float32(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.float32(10))) == pytest.approx(1.0)
+    end = float(schedule(cfg, jnp.float32(100)))
+    assert end == pytest.approx(0.1, rel=1e-3)
+
+
+def test_loss_decreases_smollm():
+    cfg = reduced_config("smollm-135m")
+    _, hist = train_loop(cfg, steps=25, batch=4, seq=64, log_every=5)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.95
+
+
+def test_checkpoint_roundtrip_with_opt_state():
+    cfg = reduced_config("gemma3-1b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "c.npz")
+        save_checkpoint(path, params, opt, meta={"arch": cfg.name})
+        p2, o2 = load_checkpoint(path, params, opt)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert int(o2.step) == int(opt.step)
+        assert os.path.exists(path + ".meta.json")
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
