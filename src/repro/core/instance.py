@@ -30,6 +30,12 @@ class IterationPlan:
     def prefill_tokens(self) -> int:
         return sum(t for _, t in self.prefill_items)
 
+    def prefill_rows(self) -> List[Tuple[Request, int, int, bool]]:
+        """Batch-plan surface for executors: one row per prefill chunk as
+        ``(request, start_position, take, completes_prefill)``."""
+        return [(r, r.prefill_pos, t, t == r.prefill_remaining)
+                for r, t in self.prefill_items]
+
     def empty(self) -> bool:
         return not self.prefill_items and not self.decode_reqs
 
@@ -177,17 +183,23 @@ class Instance:
         eos = self.executor.execute(plan)
 
         prefill_done: List[Request] = []
+        finished: List[Request] = []
         for req, take in plan.prefill_items:
             req.prefill_pos += take
             req.prefill_instance = (self.iid if req.prefill_instance is None
                                     else req.prefill_instance)
             self.prefill_token_count += take
             if req.prefill_remaining == 0:
-                # prefill emits the first token
+                # prefill emits the first token — which may already be EOS
                 req.record_token(end)
-                prefill_done.append(req)
+                if eos.get(req.rid, False):
+                    req.state = State.FINISHED
+                    req.finish_time = end
+                    self.remove_request(req)
+                    finished.append(req)
+                else:
+                    prefill_done.append(req)
 
-        finished: List[Request] = []
         for req in plan.decode_reqs:
             req.interference_tokens += plan.prefill_tokens
             req.record_token(end)

@@ -1,0 +1,86 @@
+"""Packing + bucketing for the batched prefill executor.
+
+All prefill chunks of an iteration are packed into one padded
+``[B, T_bucket]`` batch with per-row start positions, valid lengths, and
+cache-slot indices.  Both axes are *bucketed* to a small set of sizes so
+the number of jit compile variants stays bounded:
+
+  * ``T`` is rounded up to the smallest configured token bucket (powers
+    of two by default) — per-row valid lengths mask the padding;
+  * ``B`` is rounded up to the next power of two — padding rows carry an
+    out-of-range slot index so their cache scatter is dropped on-device.
+
+Worst-case compile variants = ``len(t_buckets) * log2(max_batch)``, vs.
+one variant per distinct (chunk length x batch size) pair without
+bucketing.  Bigger buckets waste compute on padding; smaller buckets
+compile more variants — the knob is ``JaxExecutor(t_buckets=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def default_t_buckets(max_seq: int, smallest: int = 16) -> Tuple[int, ...]:
+    """Powers of two from ``smallest`` up to (and including) max_seq."""
+    buckets = []
+    b = smallest
+    while b < max_seq:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_seq)
+    return tuple(buckets)
+
+
+def bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n (next power of two beyond the largest)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    b = max(buckets)
+    while b < n:
+        b *= 2
+    return b
+
+
+def bucket_batch(n: int) -> int:
+    """Next power of two >= n."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class PackedPrefill:
+    """Host-side arrays for one packed prefill call.
+
+    ``slots`` rows beyond the real batch hold ``n_slots`` (out of range):
+    their on-device cache scatter drops, their gather clamps harmlessly.
+    """
+    tokens: np.ndarray      # [B, T] int32, zero-padded
+    start: np.ndarray       # [B] int32 absolute start position per row
+    valid: np.ndarray       # [B] int32 valid token count per row (0 = pad row)
+    slots: np.ndarray       # [B] int32 cache row per request (or n_slots)
+
+
+def pack_prefill(chunks, starts: Sequence[int], row_slots: Sequence[int],
+                 n_slots: int, t_buckets: Sequence[int]) -> PackedPrefill:
+    """Pack per-request prefill chunks (``chunks[i]`` = token list starting
+    at absolute position ``starts[i]``, cache row ``row_slots[i]``) into
+    one bucketed batch."""
+    B = bucket_batch(len(chunks))
+    T = bucket(max(len(c) for c in chunks), t_buckets)
+    tokens = np.zeros((B, T), np.int32)
+    start = np.zeros(B, np.int32)
+    valid = np.zeros(B, np.int32)
+    slots = np.full(B, n_slots, np.int32)
+    for i, (toks, st, sl) in enumerate(zip(chunks, starts, row_slots)):
+        take = len(toks)
+        tokens[i, :take] = toks
+        start[i] = st
+        valid[i] = take
+        slots[i] = sl
+    return PackedPrefill(tokens, start, valid, slots)

@@ -2,26 +2,53 @@
 batches on an actual model (runnable on CPU with small configs; the same
 code path jit-lowers for the TPU meshes in the dry-run).
 
-Shapes are static per compiled variant: decode always runs the full slot
-batch (inactive rows are harmless — masks derive validity from each
-row's own position, and recurrent state is zeroed at slot assignment);
-prefill chunks run row-wise with exact shapes (distinct chunk lengths
-compile once each — the demo quantizes prompt lengths to bound variants).
+Two executor paths share one cache layout:
+
+* **batched** (default): all prefill chunks of an iteration are packed
+  into one padded ``[B, T_bucket]`` jit call with per-row start
+  positions, valid lengths, and cache-slot indices.  Cache rows are
+  gathered/scattered *inside* the jitted step (slot-indexed, donated
+  buffers), and sampling (greedy argmax / temperature categorical) is
+  fused into the step so only token ids cross the host boundary.  Both
+  batch axes are bucketed (see ``repro.engine.batching``) to bound the
+  number of compile variants.  Families with recurrent or windowed
+  per-layer state (mamba2 / zamba2 / gemma3-local / whisper) and
+  capacity-dropping MoE cannot be T-padded without changing results;
+  they fall back to an on-device slot-indexed row path (exact shapes,
+  still jit-fused sampling, no host-side cache gather/scatter).
+* **row-wise reference** (``batched=False``): the original executor —
+  per-request exact-shape prefill with host-side cache row
+  gather/scatter and host-side sampling.  Kept as the token-exact
+  oracle the batched path is tested against.
+
+Decode always runs the full slot batch (inactive rows are harmless —
+masks derive validity from each row's own position, and recurrent state
+is zeroed at slot assignment).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine import migrate
+from repro.engine import batching, migrate
 from repro.engine.kvcache import SlotTable
 from repro.engine.request import Request
 from repro.models import transformer as tf
-from repro.models.config import ModelConfig
+from repro.models.config import ATTN, ModelConfig
+
+
+def packable(cfg: ModelConfig) -> bool:
+    """True if T-padded packed prefill is token-exact for this config:
+    every layer is full-cache global attention (padding KV writes are
+    dropped and padded positions are masked by causality).  Ring-buffer
+    windows would be overwritten by padding slots, recurrent SSM state
+    would advance through padding, and capacity-dropping MoE would route
+    padding tokens into expert capacity."""
+    return all(b == ATTN for seg in cfg.segments() for b in seg.pattern)
 
 
 class JaxExecutor:
@@ -29,19 +56,36 @@ class JaxExecutor:
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int, max_seq: int,
                  eos_id: Optional[int] = None, greedy: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, batched: bool = True,
+                 t_buckets: Optional[Sequence[int]] = None,
+                 temperature: float = 1.0):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.greedy = greedy
+        self.temperature = temperature
+        self.batched = batched
+        self.packed = batched and packable(cfg)
+        self.t_buckets = (batching.default_t_buckets(max_seq)
+                          if t_buckets is None else tuple(sorted(t_buckets)))
         self.cache = tf.init_cache(cfg, n_slots, max_seq)
         self.slots = SlotTable(n_slots)
         self.positions = np.zeros(n_slots, np.int32)
         self.last_token = np.zeros(n_slots, np.int32)
         self._rng = np.random.default_rng(seed)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._step = 0
 
+        def _sample_on_device(logits, key):
+            if self.greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(
+                key, logits.astype(jnp.float32) / self.temperature,
+                axis=-1).astype(jnp.int32)
+
+        # ---- reference path (host-side sampling, logits cross) ----
         @jax.jit
         def _decode(params, cache, tokens, pos):
             logits, cache, _ = tf.forward(params, cfg, tokens, pos[:, None],
@@ -60,6 +104,60 @@ class JaxExecutor:
             return logits[:, -1], row_cache
 
         self._prefill_row = _prefill_row
+
+        # ---- batched path (fused sampling, tokens cross) ----
+        @functools.partial(jax.jit, donate_argnames=("cache",))
+        def _decode_fused(params, cache, tokens, pos, key):
+            logits, cache, _ = tf.forward(params, cfg, tokens, pos[:, None],
+                                          cache)
+            return _sample_on_device(logits[:, -1], key), cache
+
+        self._decode_fused = _decode_fused
+
+        @functools.partial(jax.jit, donate_argnames=("cache",))
+        def _prefill_packed(params, cache, tokens, start, valid, slots, key):
+            # compile variants keyed on the bucketed (B, T) shape only
+            T = tokens.shape[1]
+            positions = jnp.minimum(
+                start[:, None] + jnp.arange(T, dtype=jnp.int32)[None],
+                max_seq - 1)                   # padding must not wrap slots
+            rows = jax.tree.map(lambda a: a[:, slots], cache["segments"])
+            hidden, new_rows, _ = tf.forward(
+                params, cfg, tokens, positions, {"segments": rows},
+                compute_logits=False, valid_len=valid)
+            # pad rows carry slot == n_slots: scatter drops them on-device
+            segs = jax.tree.map(
+                lambda a, r: a.at[:, slots].set(r.astype(a.dtype),
+                                                mode="drop"),
+                cache["segments"], new_rows["segments"])
+            last = jnp.take_along_axis(
+                hidden, jnp.maximum(valid - 1, 0)[:, None, None], axis=1)[:, 0]
+            logits = jnp.einsum("bd,dv->bv", last, params["lm_head"])
+            return _sample_on_device(logits, key), {"segments": segs}
+
+        self._prefill_packed = _prefill_packed
+
+        @functools.partial(jax.jit, donate_argnames=("cache",))
+        def _prefill_slot(params, cache, tokens, start, slot, key):
+            # exact-shape fallback for families where padding is unsafe;
+            # the cache row is still gathered/scattered on-device.
+            positions = start[:, None] + jnp.arange(
+                tokens.shape[1], dtype=jnp.int32)[None]
+            row = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                cache["segments"])
+            hidden, new_row, _ = tf.forward(
+                params, cfg, tokens, positions, {"segments": row},
+                compute_logits=False)
+            segs = jax.tree.map(
+                lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+                    a, r.astype(a.dtype), slot, axis=1),
+                cache["segments"], new_row["segments"])
+            logits = jnp.einsum("bd,dv->bv", hidden[:, -1],
+                                params["lm_head"])
+            return _sample_on_device(logits, key), {"segments": segs}
+
+        self._prefill_slot = _prefill_slot
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request):
@@ -91,11 +189,86 @@ class JaxExecutor:
     def _sample(self, logits_row) -> int:
         if self.greedy:
             return int(jnp.argmax(logits_row))
-        p = np.asarray(jax.nn.softmax(logits_row.astype(jnp.float32)))
+        p = np.asarray(jax.nn.softmax(
+            logits_row.astype(jnp.float32) / self.temperature))
         return int(self._rng.choice(len(p), p=p / p.sum()))
+
+    def _next_key(self):
+        key = jax.random.fold_in(self._base_key, self._step)
+        self._step += 1
+        return key
 
     # ------------------------------------------------------------------
     def execute(self, plan) -> Dict[int, bool]:
+        if self.batched:
+            return self._execute_batched(plan)
+        return self._execute_reference(plan)
+
+    # ---- batched hot path --------------------------------------------
+    def _execute_batched(self, plan) -> Dict[int, bool]:
+        eos: Dict[int, bool] = {}
+        if plan.prefill_items:
+            rows = plan.prefill_rows()
+            if self.packed:
+                self._prefill_packed_call(rows, eos)
+            else:
+                self._prefill_slot_calls(rows, eos)
+        if plan.decode_reqs:
+            toks, self.cache = self._decode_fused(
+                self.params, self.cache,
+                jnp.asarray(self.last_token[:, None]),
+                jnp.asarray(self.positions), self._next_key())
+            toks = np.asarray(toks)
+            for req in plan.decode_reqs:
+                slot = self.slots.slot(req.rid)
+                tok = int(toks[slot])
+                req.output_tokens.append(tok)
+                self.last_token[slot] = tok
+                self.positions[slot] += 1
+                if self.eos_id is not None and tok == self.eos_id:
+                    eos[req.rid] = True
+        return eos
+
+    def _prefill_packed_call(self, rows, eos):
+        chunks = [req.prompt_tokens[start:start + take]
+                  for req, start, take, _ in rows]
+        row_slots = self.slots.slots_of([req.rid for req, _, _, _ in rows])
+        packed = batching.pack_prefill(
+            chunks, [start for _, start, _, _ in rows], row_slots,
+            self.n_slots, self.t_buckets)
+        toks, self.cache = self._prefill_packed(
+            self.params, self.cache, packed.tokens, packed.start,
+            packed.valid, packed.slots, self._next_key())
+        toks = np.asarray(toks)
+        for i, (req, start, take, completes) in enumerate(rows):
+            slot = row_slots[i]
+            self.positions[slot] = start + take
+            if completes:
+                tok = int(toks[i])
+                req.output_tokens.append(tok)
+                self.last_token[slot] = tok
+                if self.eos_id is not None and tok == self.eos_id:
+                    eos[req.rid] = True
+
+    def _prefill_slot_calls(self, rows, eos):
+        for req, start, take, completes in rows:
+            slot = self.slots.slot(req.rid)
+            chunk = np.asarray(req.prompt_tokens[start:start + take],
+                               np.int32)[None]
+            tok, self.cache = self._prefill_slot(
+                self.params, self.cache, jnp.asarray(chunk),
+                jnp.full((1,), start, jnp.int32),
+                jnp.int32(slot), self._next_key())
+            self.positions[slot] = start + take
+            if completes:
+                tok = int(tok[0])
+                req.output_tokens.append(tok)
+                self.last_token[slot] = tok
+                if self.eos_id is not None and tok == self.eos_id:
+                    eos[req.rid] = True
+
+    # ---- row-wise reference path (token-exact oracle) ----------------
+    def _execute_reference(self, plan) -> Dict[int, bool]:
         eos: Dict[int, bool] = {}
         # --- chunked prefill (row-wise, exact shapes) ---
         for req, take in plan.prefill_items:
@@ -116,6 +289,8 @@ class JaxExecutor:
                 tok = self._sample(last[0])
                 req.output_tokens.append(tok)
                 self.last_token[slot] = tok
+                if self.eos_id is not None and tok == self.eos_id:
+                    eos[req.rid] = True
         # --- decode (full slot batch, one call) ---
         if plan.decode_reqs:
             tokens = jnp.asarray(self.last_token[:, None])

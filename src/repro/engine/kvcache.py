@@ -16,7 +16,7 @@ The actual tensor cache in the JAX engine is slot-contiguous (slot index
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 
 class OutOfBlocks(Exception):
@@ -115,6 +115,10 @@ class SlotTable:
 
     def slot(self, rid: int) -> int:
         return self._slot_of[rid]
+
+    def slots_of(self, rids) -> List[int]:
+        """Batch lookup for packed execution (one row per request)."""
+        return [self._slot_of[r] for r in rids]
 
     def has(self, rid: int) -> bool:
         return rid in self._slot_of

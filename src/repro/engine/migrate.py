@@ -7,6 +7,10 @@ row across all leaves, ships it (in production: ICI point-to-point,
 modeled by ``CostModel.transfer_time``), and inserts it into a free slot
 of the destination instance's cache.
 
+The row ops are jitted with the slot as a *traced* scalar so each
+operation compiles once per cache structure (not once per slot) and runs
+as a single device executable instead of one dispatch per leaf.
+
 The paper implements this as many-to-many NCCL transfers decoupled from
 the critical path (§3.5); here the copy is an array op and the *time* is
 charged by the estimator, keeping the scheduling semantics identical.
@@ -17,26 +21,43 @@ import jax
 import jax.numpy as jnp
 
 
+@jax.jit
+def _extract(segments, slot):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, slot, 1, keepdims=False),
+        segments)
+
+
+@jax.jit
+def _insert(segments, row, slot):
+    return jax.tree.map(
+        lambda a, r: jax.lax.dynamic_update_index_in_dim(
+            a, r.astype(a.dtype), slot, 1), segments, row)
+
+
+@jax.jit
+def _zero(segments, slot):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_update_index_in_dim(
+            a, jnp.zeros_like(jax.lax.index_in_dim(a, 0, 1, keepdims=False)),
+            slot, 1), segments)
+
+
 def extract_row(cache, slot: int):
     """Copy one request's state out of a cache pytree (batch axis 1)."""
-    return jax.tree.map(lambda a: a[:, slot], cache["segments"])
+    return _extract(cache["segments"], jnp.int32(slot))
 
 
 def insert_row(cache, row, slot: int):
     """Insert an extracted row into a cache at ``slot``; returns new cache."""
-    new_segments = jax.tree.map(
-        lambda a, r: a.at[:, slot].set(r), cache["segments"], row)
-    return {"segments": new_segments}
+    return {"segments": _insert(cache["segments"], row, jnp.int32(slot))}
 
 
 def zero_row(cache, slot: int):
     """Reset one slot's state (recurrent SSM/conv state must not leak
     between requests; KV is masked by position so zeroing is belt-and-
     braces)."""
-    new_segments = jax.tree.map(
-        lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot])),
-        cache["segments"])
-    return {"segments": new_segments}
+    return {"segments": _zero(cache["segments"], jnp.int32(slot))}
 
 
 def row_bytes(row) -> int:

@@ -123,32 +123,49 @@ def ring_slot_positions(write_end, capacity: int):
     return jnp.where((a >= 0) & (write_end[:, None] > 0), a, -1)
 
 
-def write_cache(cache_k, cache_v, k_new, v_new, start):
+def write_cache(cache_k, cache_v, k_new, v_new, start, valid_len=None):
     """Write [B,T] new KV at absolute positions start..start+T (per row).
 
     For ring buffers (capacity < max_seq) the slot is pos % capacity.
     start: [B] int32.  Assumes T <= capacity.
+
+    valid_len: optional [B] int32 — rows padded to a common T bucket only
+    write their first ``valid_len`` tokens; padding writes are routed to
+    an out-of-range slot and dropped on-device (no host round-trip, no
+    garbage keys in the cache).
     """
     B, T = k_new.shape[:2]
     S = cache_k.shape[1]
     pos = start[:, None] + jnp.arange(T)[None, :]
     slots = jnp.mod(pos, S)
+    mode = None
+    if valid_len is not None:
+        token_valid = jnp.arange(T)[None, :] < valid_len[:, None]
+        slots = jnp.where(token_valid, slots, S)
+        mode = "drop"
     bidx = jnp.arange(B)[:, None].repeat(T, 1)
-    cache_k = cache_k.at[bidx, slots].set(k_new)
-    cache_v = cache_v.at[bidx, slots].set(v_new)
+    cache_k = cache_k.at[bidx, slots].set(k_new, mode=mode)
+    cache_v = cache_v.at[bidx, slots].set(v_new, mode=mode)
     return cache_k, cache_v
 
 
 def self_attention(p, cfg, x, positions, cache=None, *, window: int = 0,
-                   rope: bool = True):
+                   rope: bool = True, valid_len=None):
     """positions: [B,T] absolute positions of x's tokens.
 
     cache=None  -> pure in-chunk causal attention (training / encoder-free).
     cache={k,v} -> write chunk into cache, attend over full cache (chunked
                    prefill when T>1, decode when T==1).
+    valid_len   -> optional [B] per-row valid token counts for T-padded
+                   batched prefill (full-cache layers only): padding KV
+                   writes are dropped, padded queries are masked off by
+                   causality (their outputs are discarded by the caller).
     Returns (out [B,T,d], new_cache).
     """
     B, T, _ = x.shape
+    if valid_len is not None and (cache is None or window):
+        raise NotImplementedError(
+            "valid_len packing requires a full (non-windowed) KV cache")
     q, k, v = _project_qkv(p, cfg, x)
     if rope:
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -175,8 +192,8 @@ def self_attention(p, cfg, x, positions, cache=None, *, window: int = 0,
             start = positions[:, -1] + 1 - S
         ck, cv = write_cache(cache["k"], cache["v"], k, v, start)
         return out, {"k": ck, "v": cv}
-    ck, cv = write_cache(cache["k"], cache["v"], k, v, start)
-    if _USE_KERNELS:
+    ck, cv = write_cache(cache["k"], cache["v"], k, v, start, valid_len)
+    if _USE_KERNELS and (valid_len is None or T == 1):
         if T == 1:
             from repro.kernels.decode_attention.ops import decode_attention
             o = decode_attention(q[:, 0], ck, cv,

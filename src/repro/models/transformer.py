@@ -159,7 +159,8 @@ def abstract_cache(cfg, batch, max_seq, dtype=None, cross_len: int = 0):
 # Blocks
 # ---------------------------------------------------------------------------
 
-def _apply_block(btype, bp, cfg, x, positions, cache, shared_attn, enc_out):
+def _apply_block(btype, bp, cfg, x, positions, cache, shared_attn, enc_out,
+                 valid_len=None):
     """Returns (x, new_cache, aux_loss)."""
     from repro.distributed import hints
     x = hints.constrain_tokens(x)
@@ -178,14 +179,16 @@ def _apply_block(btype, bp, cfg, x, positions, cache, shared_attn, enc_out):
             nc = None
         else:
             a, nc = attn_lib.self_attention(bp["attn"], cfg, h, positions,
-                                            cache, window=window)
+                                            cache, window=window,
+                                            valid_len=valid_len)
         x = x + a
         h = rms_norm(x, bp["ln2"], cfg.norm_eps)
         x = x + mlp(bp["mlp"], h)
         return x, nc, aux
     if btype == MOE:
         h = rms_norm(x, bp["ln1"], cfg.norm_eps)
-        a, nc = attn_lib.self_attention(bp["attn"], cfg, h, positions, cache)
+        a, nc = attn_lib.self_attention(bp["attn"], cfg, h, positions, cache,
+                                        valid_len=valid_len)
         x = x + a
         h = rms_norm(x, bp["ln2"], cfg.norm_eps)
         mo, aux = moe_lib.moe_ffn(bp["moe"], cfg, h)
@@ -239,7 +242,7 @@ def _apply_block(btype, bp, cfg, x, positions, cache, shared_attn, enc_out):
 
 
 def _run_segment(seg: Segment, seg_params, cfg, x, positions, seg_cache,
-                 shared_attn, enc_out, use_remat: bool):
+                 shared_attn, enc_out, use_remat: bool, valid_len=None):
     """Scan over the segment's periods."""
 
     cache_present = tuple(
@@ -265,7 +268,7 @@ def _run_segment(seg: Segment, seg_params, cfg, x, positions, seg_cache,
                 c = None
             x, nc, block_aux = _apply_block(btype, p_params[i], cfg, x,
                                             positions, c, shared_attn,
-                                            enc_out)
+                                            enc_out, valid_len)
             aux = aux + block_aux
             if cache_present[i]:
                 new_stack.append(jax.tree.map(
@@ -300,12 +303,16 @@ def _run_segment(seg: Segment, seg_params, cfg, x, positions, seg_cache,
 # ---------------------------------------------------------------------------
 
 def forward(params, cfg: ModelConfig, tokens, positions=None, cache=None, *,
-            image_embeds=None, audio_embeds=None, compute_logits=True):
+            image_embeds=None, audio_embeds=None, compute_logits=True,
+            valid_len=None):
     """tokens: [B, T] int32.  positions: [B, T] absolute positions (defaults
     to arange).  cache: from init_cache, or None for train/full-context.
 
     image_embeds: [B, S_img, vision_dim] (vlm prefill) — prepended.
     audio_embeds: [B, S_frames, d_model] (audio prefill) — encoder input.
+    valid_len: [B] int32 per-row valid token counts for T-padded batched
+    prefill (full-cache attention families only); padding KV writes are
+    dropped so the cache stays exactly sequential.
 
     Returns (logits [B, T', V] or hidden, new_cache, aux_loss).
     """
@@ -346,7 +353,7 @@ def forward(params, cfg: ModelConfig, tokens, positions=None, cache=None, *,
             continue
         x, ncache, aux = _run_segment(seg, seg_params, cfg, x, positions,
                                       seg_cache, shared_attn, enc_out,
-                                      use_remat)
+                                      use_remat, valid_len)
         aux_total = aux_total + aux
         new_seg_caches.append(ncache)
 

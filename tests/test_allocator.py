@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) for the paged-KV block allocator and
 slot table invariants — the substrate Algorithm 1's watermark reads."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

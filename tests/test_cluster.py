@@ -37,6 +37,7 @@ def test_latency_accounting_monotone():
         assert r.first_token_time <= r.last_token_time
 
 
+@pytest.mark.slow
 def test_obs1_structure_under_balanced_slo():
     """The paper's core observation at moderate test scale: aggregation
     degrades TPOT, disaggregation degrades TTFT, TaiChi bounds both."""
@@ -100,6 +101,7 @@ def test_interference_accounting():
         "mixed batches must record prefill-decode interference"
 
 
+@pytest.mark.slow
 def test_backflow_resets_tpot_window():
     st = _run("taichi", Sliders(1, 3, 2048, 64), qps=110, n=250,
               blocks=1500)

@@ -13,6 +13,9 @@ from repro.engine.engine import JaxExecutor
 from repro.engine.request import Request
 from repro.models import transformer as tf
 
+# slow tier: full JAX model/engine execution (run with `pytest -m slow`)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def setup():

@@ -1,0 +1,162 @@
+"""Batched-executor parity: the packed, bucketed, fully-jitted path must
+be token-exact vs. the retained row-wise reference oracle under greedy
+decoding — across uneven prompt lengths spanning multiple T buckets and
+a mid-stream migration (extract_state/insert_state round-trip).
+
+The pure-numpy packing/bucketing unit tests at the top run in the fast
+tier; the model-executing parity tests are slow-tier."""
+import numpy as np
+import pytest
+
+from repro.engine import batching
+
+# ---------------------------------------------------------------------------
+# fast tier: packing / bucketing logic (no model execution)
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_rounds_up_to_configured_then_pow2():
+    buckets = (16, 32, 64)
+    assert batching.bucket(1, buckets) == 16
+    assert batching.bucket(16, buckets) == 16
+    assert batching.bucket(17, buckets) == 32
+    assert batching.bucket(64, buckets) == 64
+    assert batching.bucket(65, buckets) == 128      # beyond largest: pow2
+    assert batching.bucket_batch(1) == 1
+    assert batching.bucket_batch(3) == 4
+    assert batching.bucket_batch(8) == 8
+
+
+def test_default_t_buckets_cover_max_seq():
+    bs = batching.default_t_buckets(256)
+    assert bs[0] == 16 and bs[-1] == 256
+    assert all(b2 == 2 * b1 for b1, b2 in zip(bs, bs[1:]))
+    assert batching.default_t_buckets(48)[-1] == 48  # non-pow2 max_seq kept
+
+
+def test_pack_prefill_pads_rows_and_batch():
+    packed = batching.pack_prefill(
+        chunks=[[5, 6, 7], [8, 9]], starts=[4, 0], row_slots=[2, 0],
+        n_slots=4, t_buckets=(4, 8))
+    assert packed.tokens.shape == (2, 4)             # B=2 (pow2), T bucket 4
+    np.testing.assert_array_equal(packed.tokens[0], [5, 6, 7, 0])
+    np.testing.assert_array_equal(packed.valid, [3, 2])
+    np.testing.assert_array_equal(packed.start, [4, 0])
+    np.testing.assert_array_equal(packed.slots, [2, 0])
+    # batch padding rows carry the out-of-range slot (scatter drops them)
+    packed3 = batching.pack_prefill(
+        chunks=[[1], [2], [3]], starts=[0, 0, 0], row_slots=[0, 1, 2],
+        n_slots=4, t_buckets=(4,))
+    assert packed3.tokens.shape == (4, 4)
+    assert packed3.slots[3] == 4
+    assert packed3.valid[3] == 0
+
+
+# ---------------------------------------------------------------------------
+# slow tier: token-exact parity on a real (reduced) model
+# ---------------------------------------------------------------------------
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import reduced_config                      # noqa: E402
+from repro.core.estimator import CostModel                    # noqa: E402
+from repro.core.hw import InstanceSpec                        # noqa: E402
+from repro.core.instance import D_HEAVY, P_HEAVY, Instance    # noqa: E402
+from repro.engine.engine import JaxExecutor, packable         # noqa: E402
+from repro.engine.request import Request                      # noqa: E402
+from repro.models import transformer as tf                    # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cost = CostModel(cfg, InstanceSpec(tp=1))
+    return cfg, params, cost
+
+
+def _generate(cfg, params, cost, prompts, n_out, *, batched, chunk=32,
+              t_buckets=(8, 16, 32)):
+    ex = JaxExecutor(cfg, params, n_slots=len(prompts) + 1, max_seq=256,
+                     batched=batched, t_buckets=t_buckets)
+    inst = Instance(0, D_HEAVY, chunk, cost, ex, hbm_blocks=512)
+    reqs = [Request(prompt_len=len(p), max_new_tokens=n_out,
+                    hidden_output_len=n_out, prompt_tokens=list(p))
+            for p in prompts]
+    for r in reqs:
+        inst.enqueue_prefill(r)
+    now, guard = 0.0, 0
+    while not all(r.done() for r in reqs) and guard < 300:
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        guard += 1
+        for r in done:
+            inst.admit_decode(r)
+    assert all(r.done() for r in reqs)
+    return [r.output_tokens for r in reqs]
+
+
+@pytest.mark.slow
+def test_batched_matches_rowwise_uneven_buckets(setup):
+    """Uneven prompt lengths whose chunk sequence spans at least two T
+    buckets (9/14 -> 16-bucket, 24-token tail -> 32-bucket)."""
+    cfg, params, cost = setup
+    assert packable(cfg)
+    rng = np.random.default_rng(5)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (9, 14, 33, 47)]
+    ref = _generate(cfg, params, cost, prompts, 6, batched=False)
+    bat = _generate(cfg, params, cost, prompts, 6, batched=True)
+    assert bat == ref
+
+
+@pytest.mark.slow
+def test_batched_migration_round_trip_token_exact(setup):
+    """extract_state/insert_state between two batched engines mid-decode
+    must not change greedy generation vs. the row-wise reference."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(6)
+    prompt = list(rng.integers(1, cfg.vocab_size, size=26))
+
+    def run_migrated(batched):
+        exA = JaxExecutor(cfg, params, n_slots=4, max_seq=256,
+                          batched=batched)
+        exB = JaxExecutor(cfg, params, n_slots=4, max_seq=256,
+                          batched=batched)
+        iA = Instance(0, D_HEAVY, 16, cost, exA, hbm_blocks=512)
+        iB = Instance(1, P_HEAVY, 16, cost, exB, hbm_blocks=512)
+        req = Request(prompt_len=len(prompt), max_new_tokens=8,
+                      hidden_output_len=8, prompt_tokens=list(prompt))
+        iA.enqueue_prefill(req)
+        now = 0.0
+        while req.prefill_remaining > 0:
+            dur, _, _ = iA.run_iteration(now)
+            now += dur
+        iA.admit_decode(req)
+        for _ in range(3):
+            dur, _, _ = iA.run_iteration(now)
+            now += dur
+        state = iA.eject(req)
+        iB.inject(req, state)
+        while not req.done():
+            dur, _, _ = iB.run_iteration(now)
+            now += dur
+        return req.output_tokens
+
+    assert run_migrated(True) == run_migrated(False)
+
+
+@pytest.mark.slow
+def test_slot_fallback_matches_rowwise_nonpackable(setup):
+    """Families where T-padding is unsafe (ring-buffer local attention)
+    take the on-device slot-indexed row path — still token-exact."""
+    cfg = reduced_config("gemma3-1b")
+    assert not packable(cfg)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cost = CostModel(cfg, InstanceSpec(tp=1))
+    rng = np.random.default_rng(8)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (13, 21)]
+    ref = _generate(cfg, params, cost, prompts, 4, batched=False, chunk=16)
+    bat = _generate(cfg, params, cost, prompts, 4, batched=True, chunk=16)
+    assert bat == ref

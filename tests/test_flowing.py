@@ -1,0 +1,118 @@
+"""Fast-tier (pure-Python, no JAX execution) invariants of Algorithm 1's
+selection logic — flowing decode scheduling.  These duplicate the
+hypothesis-free core of tests/test_scheduler.py so the invariants stay
+covered on a bare interpreter (the scheduler module skips entirely when
+hypothesis isn't installed)."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import flowing
+from repro.core.estimator import CostModel
+from repro.core.hw import InstanceSpec
+from repro.core.instance import D_HEAVY, P_HEAVY, Instance
+from repro.engine.engine import SimExecutor
+from repro.engine.request import Request
+
+COST = CostModel(get_config("qwen2.5-14b"), InstanceSpec(tp=4))
+
+
+def _inst(iid=0, itype=D_HEAVY, chunk=256, blocks=64, block_size=16):
+    return Instance(iid, itype, chunk, COST, SimExecutor(),
+                    hbm_blocks=blocks, block_size=block_size)
+
+
+def _decoding_request(inst, prompt=100, out_len=5, now=0.0,
+                      tpot: float = 0.02):
+    r = Request(prompt_len=prompt, max_new_tokens=512,
+                hidden_output_len=400)
+    r.prefill_pos = prompt
+    r.output_len = out_len
+    r.first_token_time = now
+    r.tpot_reset_time = now
+    r.last_token_time = now + tpot * max(out_len - 1, 0)
+    inst.allocator.allocate(r.rid, r.context_len)
+    inst.decoding[r.rid] = r
+    return r
+
+
+# ---------------------------------------------------------------------------
+# select_degrade (D-heavy, Algorithm 1 lines 4-12)
+# ---------------------------------------------------------------------------
+
+def test_degrade_stops_exactly_at_watermark():
+    """The loop must stop at the FIRST point projected usage <= M — no
+    over-selection once enough memory is released."""
+    inst = _inst(blocks=1000)
+    reqs = [_decoding_request(inst, prompt=300, out_len=o)
+            for o in (10, 20, 30, 40)]
+    used = inst.allocator.used_blocks
+    longest = max(reqs, key=lambda r: r.output_len)
+    release = inst.allocator.blocks_for(longest.context_len)
+    # watermark satisfiable by releasing exactly the single longest request
+    watermark = (used - release) / inst.allocator.num_blocks
+    sel = flowing.select_degrade(inst, watermark)
+    assert [r.rid for r in sel] == [longest.rid]
+
+
+def test_degrade_never_repeats_and_exhausts_candidates():
+    """Unsatisfiable watermark: every decoding request selected exactly
+    once, then the loop terminates on candidate exhaustion."""
+    inst = _inst(blocks=10_000)
+    reqs = [_decoding_request(inst, prompt=200, out_len=o)
+            for o in (1, 2, 3, 4, 5)]
+    sel = flowing.select_degrade(inst, watermark=0.0)
+    rids = [r.rid for r in sel]
+    assert len(rids) == len(set(rids)) == len(reqs)
+    assert set(rids) == {r.rid for r in reqs}
+    # longest-first order
+    assert [r.output_len for r in sel] == sorted(
+        (r.output_len for r in reqs), reverse=True)
+
+
+def test_degrade_noop_when_usage_below_watermark():
+    inst = _inst(blocks=1000)
+    _decoding_request(inst)
+    assert flowing.select_degrade(inst, watermark=0.95) == []
+
+
+def test_degrade_empty_instance():
+    inst = _inst(blocks=16)
+    assert flowing.select_degrade(inst, watermark=0.0) == []
+
+
+# ---------------------------------------------------------------------------
+# select_backflow (P-heavy, Algorithm 1 lines 1-3)
+# ---------------------------------------------------------------------------
+
+def test_backflow_returns_only_tpot_violators():
+    inst = _inst(itype=P_HEAVY)
+    tpot_slo, alpha = 0.1, 0.9
+    fast = _decoding_request(inst, out_len=10, tpot=0.02)
+    slow = _decoding_request(inst, out_len=10, tpot=0.095)
+    border = _decoding_request(inst, out_len=10, tpot=tpot_slo * alpha)
+    out = flowing.select_backflow(inst, tpot_slo, alpha, now=1.0)
+    assert [r.rid for r in out] == [slow.rid]
+    assert fast.rid not in {r.rid for r in out}
+    # boundary: current_tpot == alpha * slo must NOT flow back (strict >)
+    assert border.rid not in {r.rid for r in out}
+    for r in out:
+        assert r.current_tpot(1.0) > alpha * tpot_slo
+
+
+def test_backflow_skips_requests_without_tpot_window():
+    """n <= 1 tokens since reset -> current_tpot is None -> never selected."""
+    inst = _inst(itype=P_HEAVY)
+    r = _decoding_request(inst, out_len=1, tpot=9.9)
+    assert flowing.select_backflow(inst, 0.1, 0.9, now=1.0) == []
+    r2 = _decoding_request(inst, out_len=20, tpot=9.9)
+    r2.tpot_reset_len = 19          # just flowed back: effectively new
+    out = flowing.select_backflow(inst, 0.1, 0.9, now=1.0)
+    assert r2.rid not in {x.rid for x in out}
+    assert r.rid not in {x.rid for x in out}
+
+
+def test_backflow_requires_p_heavy_and_degrade_requires_d_heavy():
+    with pytest.raises(AssertionError):
+        flowing.select_backflow(_inst(itype=D_HEAVY), 0.1, 0.9, now=0.0)
+    with pytest.raises(AssertionError):
+        flowing.select_degrade(_inst(itype=P_HEAVY), 0.5)

@@ -10,6 +10,9 @@ from repro.configs import reduced_config
 from repro.models import attention
 from repro.models import transformer as tf
 
+# slow tier: full JAX model/engine execution (run with `pytest -m slow`)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(autouse=True)
 def _reset_kernels():

@@ -10,6 +10,9 @@ import pytest
 from repro.configs import ASSIGNED, get_config, reduced_config
 from repro.models import transformer as tf
 
+# slow tier: full JAX model/engine execution (run with `pytest -m slow`)
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 B, T = 2, 32
 

@@ -1,7 +1,13 @@
 """Unit + property tests for the paper's two algorithms and the policy
-corner cases (TaiChi sliders recover aggregation / disaggregation)."""
-import hypothesis.strategies as st
+corner cases (TaiChi sliders recover aggregation / disaggregation).
+
+The hypothesis-free invariants are duplicated in tests/test_flowing.py so
+the fast tier keeps Algorithm 1 coverage on a bare interpreter."""
 import pytest
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs import get_config

@@ -15,6 +15,9 @@ from repro.engine.request import Request, State
 from repro.models import transformer as tf
 from repro.sim.workload import LengthDist, WorkloadSpec
 
+# slow tier: full JAX model/engine execution (run with `pytest -m slow`)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def system():

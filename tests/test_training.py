@@ -14,6 +14,9 @@ from repro.training.optimizer import (AdamWConfig, adamw_update,
                                       global_norm, init_opt_state, schedule)
 from repro.training.train import train_loop
 
+# slow tier: full JAX model/engine execution (run with `pytest -m slow`)
+pytestmark = pytest.mark.slow
+
 
 def test_adamw_first_step_is_signed_lr():
     """After one step with beta-corrected moments, |delta| ~ lr for a
