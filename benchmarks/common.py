@@ -1,8 +1,12 @@
 """Shared benchmark harness: SLO regimes derived from profiled base
 latencies (the paper's absolute SLOs are A100-specific; we scale to the
-target TPU per DESIGN.md §3) and CSV emission helpers."""
+target TPU per DESIGN.md §3), CSV emission helpers, and machine-readable
+JSON result files (benchmarks/out/<name>.json — CI uploads these as
+artifacts)."""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -70,6 +74,17 @@ def emit(name: str, us_per_call: float, derived: str):
     """The benchmarks/run.py contract: ``name,us_per_call,derived``."""
     print(f"{name},{us_per_call:.1f},{derived}")
     sys.stdout.flush()
+
+
+def write_json(name: str, payload: dict, out_dir: str = None) -> str:
+    """Write a machine-readable result file next to the CSV stream."""
+    out_dir = out_dir or os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 class timed:

@@ -20,7 +20,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro.configs import reduced_config
 from repro.core.estimator import CostModel
 from repro.core.hw import InstanceSpec
@@ -107,6 +107,17 @@ def run(model: str = "smollm-135m"):
     emit("engine.speedup", 0.0,
          f"prefill_fresh_x={fresh_x:.2f};prefill_steady_x={steady_x:.2f};"
          f"decode_x={decode_x:.2f}")
+    write_json("engine_bench", {
+        "model": model, "chunk": CHUNK, "n_reqs": N_REQS,
+        "tokens_per_s": {
+            name: {"prefill_fresh": round(r[0], 1),
+                   "prefill_steady": round(r[1], 1),
+                   "decode_steps_per_s": round(r[2], 1)}
+            for name, r in results.items()},
+        "speedup": {"prefill_fresh_x": round(fresh_x, 2),
+                    "prefill_steady_x": round(steady_x, 2),
+                    "decode_x": round(decode_x, 2)},
+    })
     return fresh_x, steady_x, decode_x
 
 

@@ -19,6 +19,7 @@ MODULES = [
     "fig17_latency_reduction",  # Fig 17 (C5)
     "fig18_breakdown",       # Fig 18 (C6)
     "fig19_overhead",        # Fig 19 (C7)
+    "prefix_cache_bench",    # shared-prefix KV cache vs. no-cache baseline
     "kernel_bench",          # kernels microbench
     "roofline_report",       # dry-run roofline table
 ]

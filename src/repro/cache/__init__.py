@@ -1,0 +1,9 @@
+"""Shared-prefix KV-cache subsystem: ref-counted copy-on-write block
+sharing, a radix tree over per-block token hashes, and the per-instance
+facade that admission/routing consults (see prefix_cache.py)."""
+from repro.cache.prefix_cache import PrefixCache
+from repro.cache.prefix_tree import PrefixTree, chain_hashes
+from repro.cache.shared_allocator import SharedBlockAllocator
+
+__all__ = ["PrefixCache", "PrefixTree", "SharedBlockAllocator",
+           "chain_hashes"]

@@ -1,0 +1,103 @@
+"""Per-instance shared-prefix KV cache: prefix tree + shared allocator.
+
+The facade an ``Instance`` owns when prefix caching is enabled.  It is
+pure bookkeeping (block ids, token hashes) — tensor reuse on the real
+engine is the executor's ``claim_prefix``, which this layer caps.
+
+Lifecycle per request:
+
+  match_tokens(prompt)          # pure — proxy routing peeks at all instances
+  acquire(rid, prompt, hit, n)  # admission: ref matched blocks + fresh rest
+  commit(rid, prompt)           # prefill done: full prompt blocks -> tree
+  release(rid)                  # decref; refcount-0 registered blocks are
+                                # RETAINED (LRU) for future prefix hits
+
+Eviction is demand-driven inside the allocator; the tree supplies the
+LRU-*leaf* victim so interior prefixes stay matchable, and is notified
+on every eviction so it never maps a reclaimed block.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.cache.prefix_tree import PrefixTree
+from repro.cache.shared_allocator import SharedBlockAllocator
+
+
+class PrefixCache:
+    def __init__(self, num_blocks: int, block_size: int = 16):
+        self.block_size = block_size
+        self.tree = PrefixTree(block_size)
+        self.allocator = SharedBlockAllocator(
+            num_blocks, block_size,
+            on_evict=self.tree.remove_bid,
+            pick_eviction=self._pick_lru_leaf)
+
+    def _pick_lru_leaf(self) -> Optional[int]:
+        node = self.tree.lru_evictable(
+            lambda bid: self.allocator.refcount(bid) == 0)
+        return None if node is None else node.bid
+
+    # ------------------------------------------------------------------
+    def max_match_tokens(self, prompt_tokens: Sequence[int]) -> int:
+        """Hit cap: full blocks only, and at least one token must remain
+        to prefill (prefill emits the first output token)."""
+        return ((len(prompt_tokens) - 1)
+                // self.block_size * self.block_size)
+
+    def match_tokens(self, prompt_tokens: Sequence[int]) -> int:
+        """Longest reusable prefix in tokens.  Pure (no refcounts taken,
+        no LRU recency touched) — this is what cache-aware routing peeks
+        at on every instance per arrival."""
+        cap = self.max_match_tokens(prompt_tokens) // self.block_size
+        if cap <= 0:
+            return 0
+        return (len(self.tree.match(prompt_tokens, cap, touch=False))
+                * self.block_size)
+
+    def matched_bids(self, prompt_tokens: Sequence[int], hit_tokens: int,
+                     touch: bool = True) -> List[int]:
+        n = hit_tokens // self.block_size
+        return [nd.bid
+                for nd in self.tree.match(prompt_tokens, n, touch=touch)][:n]
+
+    # ------------------------------------------------------------------
+    def can_acquire(self, prompt_tokens: Sequence[int], hit_tokens: int,
+                    total_tokens: int) -> bool:
+        """Pure admission check — run BEFORE the executor claims its
+        slot/rows, so a memory-blocked request has no side effects to
+        unwind."""
+        shared = (self.matched_bids(prompt_tokens, hit_tokens, touch=False)
+                  if hit_tokens else [])
+        if len(shared) * self.block_size < hit_tokens:
+            return False
+        return self.allocator.can_allocate(total_tokens, shared)
+
+    def acquire(self, rid: int, prompt_tokens: Sequence[int],
+                hit_tokens: int, total_tokens: int) -> bool:
+        """Admission: reference ``hit_tokens`` worth of cached prefix
+        blocks and draw fresh blocks to cover ``total_tokens``.  False
+        (nothing held) when even eviction can't make room."""
+        shared = (self.matched_bids(prompt_tokens, hit_tokens)
+                  if hit_tokens else [])
+        if len(shared) * self.block_size < hit_tokens:
+            return False                      # evicted between peek/claim
+        if not self.allocator.can_allocate(total_tokens, shared):
+            return False
+        self.allocator.allocate(rid, total_tokens, shared=shared)
+        return True
+
+    def commit(self, rid: int, prompt_tokens: Sequence[int]) -> int:
+        """Prefill complete: publish the request's full prompt blocks to
+        the tree (first writer wins per position) and mark them retained.
+        Returns how many blocks this request newly published."""
+        bids = self.allocator.owned(rid)
+        n_full = len(prompt_tokens) // self.block_size
+        newly = self.tree.insert(prompt_tokens[:n_full * self.block_size],
+                                 bids[:n_full])
+        for bid in newly:
+            self.allocator.register(bid)
+        return len(newly)
+
+    def release(self, rid: int) -> int:
+        return self.allocator.free(rid)

@@ -115,4 +115,9 @@ class Cluster:
     # ------------------------------------------------------------------
     def stats(self, requests, slo: SLO, qps: float) -> RunStats:
         wall = max((r.finish_time or 0.0) for r in requests)
-        return RunStats(list(requests), slo, qps, wall)
+        return RunStats(
+            list(requests), slo, qps, wall,
+            cache_lookups=sum(i.cache_lookups for i in self.instances),
+            cache_hits=sum(i.cache_hits for i in self.instances),
+            saved_prefill_tokens=sum(i.cached_prefill_tokens
+                                     for i in self.instances))

@@ -13,6 +13,7 @@ import dataclasses
 from collections import deque
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
+from repro.cache.prefix_cache import PrefixCache
 from repro.core.estimator import CostModel
 from repro.engine.kvcache import BlockAllocator
 from repro.engine.request import Request, State
@@ -48,6 +49,8 @@ class Executor(Protocol):
 
     def add_request(self, req: Request): ...
 
+    def claim_prefix(self, req: Request, max_tokens: int) -> int: ...
+
     def extract_state(self, req: Request): ...
 
     def insert_state(self, req: Request, state): ...
@@ -59,13 +62,20 @@ class Instance:
     def __init__(self, iid: int, itype: str, chunk_size: int,
                  cost: CostModel, executor: Executor,
                  hbm_blocks: int = 4096, block_size: int = 16,
-                 max_decode_batch: int = 256):
+                 max_decode_batch: int = 256,
+                 prefix_cache: Optional[PrefixCache] = None):
         self.iid = iid
         self.itype = itype
         self.chunk_size = chunk_size
         self.cost = cost
         self.executor = executor
-        self.allocator = BlockAllocator(hbm_blocks, block_size)
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None:
+            # watermark/degradation reads the SHARED allocator: cached
+            # (refcount-0) blocks are evictable, so they don't pressure M
+            self.allocator = prefix_cache.allocator
+        else:
+            self.allocator = BlockAllocator(hbm_blocks, block_size)
         self.max_decode_batch = max_decode_batch
 
         self.prefill_queue: deque[Request] = deque()
@@ -79,6 +89,9 @@ class Instance:
         self.interference_log: List[Tuple[int, int]] = []  # (ptk, dtk)
         self.stalled_decodes: int = 0
         self.preemptions: int = 0
+        self.cache_lookups: int = 0
+        self.cache_hits: int = 0
+        self.cached_prefill_tokens: int = 0    # prefill tokens NOT recomputed
 
     # ------------------------------------------------------------------
     # admission / queues
@@ -95,6 +108,15 @@ class Instance:
 
     def hbm_utilization(self) -> float:
         return self.allocator.utilization()
+
+    def peek_prefix(self, req: Request) -> int:
+        """Longest cached prefix (tokens) this instance could reuse for
+        ``req`` — pure, so the proxy can probe every instance when
+        routing (cache-aware TTFT_hat)."""
+        if (self.prefix_cache is None or req.prefill_pos != 0
+                or not req.prompt_tokens):
+            return 0
+        return self.prefix_cache.match_tokens(req.prompt_tokens)
 
     def decode_load(self) -> int:
         """HBM usage proxy for proxy-side load balancing (paper §3.3 ①)."""
@@ -131,11 +153,8 @@ class Instance:
         while budget > 0 and self.prefill_queue:
             head = self.prefill_queue[0]
             if not self.allocator.holds(head.rid):
-                need = head.prefill_remaining + 64
-                if not self.allocator.can_allocate(need):
+                if not self._admit_prefill(head):
                     break                          # head-of-line blocking
-                self.allocator.allocate(head.rid, need)
-                self.executor.add_request(head)
             take = min(head.prefill_remaining, budget)
             items.append((head, take))
             budget -= take
@@ -155,6 +174,44 @@ class Instance:
             self.preemptions += 1
             return self.build_plan()
         return plan
+
+    def _admit_prefill(self, req: Request) -> bool:
+        """Reserve HBM blocks for a queued prefill and hand the request
+        to the executor.  With a prefix cache, the matched prefix is
+        claimed (executor may shrink it to what its rows still hold) and
+        the request's prefill starts at the matched position — the cost
+        model then charges only the uncached tokens."""
+        need = req.prefill_remaining + 64          # headroom for growth
+        if self.prefix_cache is None:
+            if not self.allocator.can_allocate(need):
+                return False
+            self.allocator.allocate(req.rid, need)
+            self.executor.add_request(req)
+            return True
+        hit = self.peek_prefix(req)
+        if not self.prefix_cache.can_acquire(req.prompt_tokens or (),
+                                             hit, need):
+            return False       # memory-blocked: no executor side effects
+        if hit:
+            claim = getattr(self.executor, "claim_prefix", None)
+            if claim is not None:
+                hit = claim(req, hit)
+            hit -= hit % self.prefix_cache.block_size
+        if not self.prefix_cache.acquire(req.rid, req.prompt_tokens or (),
+                                         hit, need):
+            # only reachable when the executor SHRANK the hit (more fresh
+            # blocks needed than pre-checked): unwind the slot claim —
+            # the executor re-registers the claimed row as a donor
+            self.executor.release(req)
+            return False
+        self.cache_lookups += 1                    # one per admission
+        if hit:
+            self.cache_hits += 1
+            self.cached_prefill_tokens += hit
+            req.prefill_pos = hit
+            req.cached_prefix_len = hit
+        self.executor.add_request(req)
+        return True
 
     def _preempt(self, req: Request):
         self.decoding.pop(req.rid, None)
@@ -190,6 +247,9 @@ class Instance:
                                     else req.prefill_instance)
             self.prefill_token_count += take
             if req.prefill_remaining == 0:
+                if self.prefix_cache is not None and req.prompt_tokens:
+                    # publish the prompt's blocks for future prefix hits
+                    self.prefix_cache.commit(req.rid, req.prompt_tokens)
                 # prefill emits the first token — which may already be EOS
                 req.record_token(end)
                 if eos.get(req.rid, False):

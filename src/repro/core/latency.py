@@ -35,9 +35,13 @@ def attainment(reqs: Sequence[Request], slo: SLO) -> float:
                for r in done) / len(done)
 
 
-def p90(xs: Iterable[float]) -> float:
+def percentile(xs: Iterable[float], q: float) -> float:
     xs = [x for x in xs if x is not None]
-    return float(np.percentile(xs, 90)) if xs else float("nan")
+    return float(np.percentile(xs, q)) if xs else float("nan")
+
+
+def p90(xs: Iterable[float]) -> float:
+    return percentile(xs, 90)
 
 
 @dataclasses.dataclass
@@ -46,27 +50,51 @@ class RunStats:
     slo: SLO
     qps: float
     wall: float
+    # prefix-cache counters (aggregated over instances by Cluster.stats;
+    # zero when caching is off)
+    cache_lookups: int = 0
+    cache_hits: int = 0
+    saved_prefill_tokens: int = 0
 
     @property
     def slo_attainment(self) -> float:
         return attainment(self.reqs, self.slo)
 
+    def ttft_percentile(self, q: float) -> float:
+        return percentile([r.ttft() for r in self.reqs], q)
+
+    @property
+    def mean_ttft(self) -> float:
+        xs = [r.ttft() for r in self.reqs if r.ttft() is not None]
+        return float(np.mean(xs)) if xs else float("nan")
+
     @property
     def p90_ttft(self) -> float:
-        return p90([r.ttft() for r in self.reqs])
+        return self.ttft_percentile(90)
 
     @property
     def p90_tpot(self) -> float:
         return p90([r.tpot() for r in self.reqs])
 
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of prefill admissions that reused a cached prefix."""
+        if self.cache_lookups == 0:
+            return 0.0
+        return self.cache_hits / self.cache_lookups
+
     def summary(self) -> dict:
-        return {
+        out = {
             "qps": self.qps,
             "n": len(self.reqs),
             "attainment": round(self.slo_attainment, 4),
             "p90_ttft_s": round(self.p90_ttft, 3),
             "p90_tpot_ms": round(self.p90_tpot * 1e3, 2),
         }
+        if self.cache_lookups:
+            out["cache_hit_rate"] = round(self.cache_hit_rate, 4)
+            out["saved_prefill_tokens"] = self.saved_prefill_tokens
+        return out
 
 
 def max_goodput(run_at_qps, qps_grid: Sequence[float],

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+from repro.cache.prefix_cache import PrefixCache
 from repro.core import flowing
 from repro.core.estimator import CostModel
 from repro.core.instance import D_HEAVY, Instance, P_HEAVY
@@ -112,16 +113,20 @@ class TaiChiPolicy(BasePolicy):
     def __init__(self, instances, cost, ttft_slo, tpot_slo,
                  sliders: Sliders, seed: int = 0,
                  enable_flowing: bool = True, length_aware: bool = True,
-                 early_rejection: bool = False):
+                 early_rejection: bool = False, cache_aware: bool = True):
         """enable_flowing / length_aware: ablation switches for the
         paper's Fig-18 breakdown (Arch -> +Flowing -> +LengthAware).
         early_rejection: drop TTFT-infeasible requests at the proxy
-        (paper §3.4 discussion; off by default for fair comparison)."""
+        (paper §3.4 discussion; off by default for fair comparison).
+        cache_aware: route on effective (post-prefix-hit) prefill
+        lengths when instances carry a prefix cache — disable to ablate
+        routing awareness while keeping KV reuse itself on."""
         super().__init__(instances, cost, ttft_slo, tpot_slo, seed=seed)
         self.sliders = sliders
         self.enable_flowing = enable_flowing
         self.length_aware = length_aware
         self.proxy.early_rejection = early_rejection
+        self.proxy.cache_aware = cache_aware
 
     def on_arrival(self, req: Request, now: float) -> Instance:
         if not self.length_aware:
@@ -159,16 +164,23 @@ class TaiChiPolicy(BasePolicy):
 
 def build_instances(cost: CostModel, sliders: Sliders,
                     executor_factory, hbm_blocks: int = 4096,
-                    block_size: int = 16) -> List[Instance]:
-    """Instantiate the differentiated-capability pool."""
+                    block_size: int = 16,
+                    prefix_cache: bool = False) -> List[Instance]:
+    """Instantiate the differentiated-capability pool.  With
+    ``prefix_cache`` each instance owns a shared-prefix KV cache over
+    its own HBM block pool (prefixes are per-instance — cross-instance
+    replication is an open item)."""
+    def make(iid, itype, chunk):
+        pc = (PrefixCache(hbm_blocks, block_size) if prefix_cache
+              else None)
+        return Instance(iid, itype, chunk, cost, executor_factory(),
+                        hbm_blocks, block_size, prefix_cache=pc)
     out = []
     iid = 0
     for _ in range(sliders.n_p):
-        out.append(Instance(iid, P_HEAVY, sliders.s_p, cost,
-                            executor_factory(), hbm_blocks, block_size))
+        out.append(make(iid, P_HEAVY, sliders.s_p))
         iid += 1
     for _ in range(sliders.n_d):
-        out.append(Instance(iid, D_HEAVY, sliders.s_d, cost,
-                            executor_factory(), hbm_blocks, block_size))
+        out.append(make(iid, D_HEAVY, sliders.s_d))
         iid += 1
     return out

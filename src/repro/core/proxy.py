@@ -11,6 +11,15 @@ falling back to P-heavy when D-heavy queues grow — load balancing).
 If no instance is feasible the request is assigned randomly (the paper
 does the same for fair comparison instead of early rejection [20]).
 
+Cache-aware extension: when instances carry a shared-prefix KV cache, E
+is computed on the EFFECTIVE prefill length (prompt minus that
+instance's longest cached prefix) and queued-token ties break toward the
+instance holding the longest prefix.  This interacts with latency
+shifting: a big hit can make a D-heavy instance feasible for a long
+prompt that would otherwise have to degrade a P-heavy one.  Q still uses
+full queued lengths — queued requests' hits are only claimed at
+admission, so the estimate stays conservative.
+
 Decode placement (§3.3 ①): prefilled on D-heavy -> decode in place (zero
 transfer); prefilled on P-heavy -> D-heavy instance with the lowest
 decode load (HBM usage).
@@ -28,11 +37,14 @@ from repro.engine.request import Request
 class Proxy:
     def __init__(self, instances: Sequence[Instance], cost: CostModel,
                  ttft_slo: float, seed: int = 0,
-                 early_rejection: bool = False):
+                 early_rejection: bool = False, cache_aware: bool = True):
         """early_rejection: when no instance can meet the TTFT SLO,
         proactively drop the request (Mooncake-style [20], paper §3.4)
         instead of randomly assigning it.  The paper disables this for
-        fair comparison with PD aggregation; we expose both behaviors."""
+        fair comparison with PD aggregation; we expose both behaviors.
+        cache_aware: use effective (post-prefix-hit) lengths in TTFT_hat
+        and prefer the prefix-holding instance on ties (no-op unless
+        instances have a prefix cache)."""
         self.instances = list(instances)
         self.cost = cost
         self.ttft_slo = ttft_slo
@@ -40,6 +52,7 @@ class Proxy:
         self.infeasible_count = 0
         self.early_rejection = early_rejection
         self.rejected_count = 0
+        self.cache_aware = cache_aware
 
     # ------------------------------------------------------------------
     def _queue_time(self, inst: Instance) -> float:
@@ -51,8 +64,13 @@ class Proxy:
                                         decode_batch=len(inst.decoding))
         return q
 
-    def _exec_time(self, inst: Instance, req: Request) -> float:
-        return self.cost.prefill_time(req.prompt_len, inst.chunk_size,
+    def _peek_hit(self, inst: Instance, req: Request) -> int:
+        return inst.peek_prefix(req) if self.cache_aware else 0
+
+    def _exec_time(self, inst: Instance, req: Request,
+                   cached: int = 0) -> float:
+        return self.cost.prefill_time(req.prompt_len - cached,
+                                      inst.chunk_size,
                                       decode_batch=len(inst.decoding))
 
     def _transfer_time(self, inst: Instance, req: Request) -> float:
@@ -62,22 +80,26 @@ class Proxy:
 
     # ------------------------------------------------------------------
     def schedule_prefill(self, req: Request, now: float) -> Instance:
-        """Algorithm 2."""
-        feasible: List[Instance] = []
+        """Algorithm 2 (+ cache-aware effective lengths)."""
+        feasible: List[tuple] = []             # (instance, prefix hit)
         for inst in self.instances:
             if inst.chunk_size <= 0:
                 continue                       # pure-decode instance
+            cached = self._peek_hit(inst, req)
             Q = self._queue_time(inst)
-            E = self._exec_time(inst, req)
+            E = self._exec_time(inst, req, cached)
             T = self._transfer_time(inst, req)
             if Q + E + T < self.ttft_slo:
-                feasible.append(inst)
+                feasible.append((inst, cached))
         if feasible:
-            # fewest queued prefill tokens; ties favor D-heavy (the paper
+            # fewest queued prefill tokens; ties favor the instance with
+            # the longest cached prefix, then D-heavy (the paper
             # "typically favors a D-heavy instance" — degradation first)
             chosen = min(feasible,
-                         key=lambda i: (i.queued_prefill_tokens(),
-                                        0 if i.itype == D_HEAVY else 1))
+                         key=lambda ic: (ic[0].queued_prefill_tokens(),
+                                         -ic[1],
+                                         0 if ic[0].itype == D_HEAVY
+                                         else 1))[0]
         else:
             self.infeasible_count += 1
             if self.early_rejection:

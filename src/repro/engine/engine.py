@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache.prefix_tree import PrefixTree
 from repro.engine import batching, migrate
 from repro.engine.kvcache import SlotTable
 from repro.engine.request import Request
@@ -58,7 +59,8 @@ class JaxExecutor:
                  eos_id: Optional[int] = None, greedy: bool = True,
                  seed: int = 0, batched: bool = True,
                  t_buckets: Optional[Sequence[int]] = None,
-                 temperature: float = 1.0):
+                 temperature: float = 1.0, prefix_cache: bool = False,
+                 cache_block_size: int = 16):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -77,6 +79,16 @@ class JaxExecutor:
         self._rng = np.random.default_rng(seed)
         self._base_key = jax.random.PRNGKey(seed)
         self._step = 0
+        # prefix-KV reuse: donor index over resident/retained slot rows.
+        # KV at position p depends only on tokens [0, p] iff every layer
+        # is full-cache global attention — same gate as T-padding.
+        self.prefix_cache_enabled = prefix_cache and packable(cfg)
+        self.cache_block_size = cache_block_size
+        self._donors = PrefixTree(cache_block_size)
+        self._claimed: set = set()
+        self._preadded: set = set()
+        self.prefix_adoptions = 0
+        self.prefix_copies = 0
 
         def _sample_on_device(logits, key):
             if self.greedy:
@@ -160,12 +172,60 @@ class JaxExecutor:
         self._prefill_slot = _prefill_slot
 
     # ------------------------------------------------------------------
+    def _acquire_slot(self, rid: int) -> int:
+        """Acquire a free slot, preferring rows that are NOT retained
+        prefix donors; whatever row is reused stops being a donor."""
+        avoid = set(self._donors.bids()) if self.prefix_cache_enabled else ()
+        slot = self.slots.acquire(rid, avoid=avoid)
+        self._donors.remove_bid(slot)
+        return slot
+
+    def claim_prefix(self, req: Request, max_tokens: int) -> int:
+        """Reuse cached KV for the longest donor-resident prefix of
+        ``req.prompt_tokens`` (capped at ``max_tokens``, full blocks).
+
+        Adopts the donor row outright when it is free (a finished
+        request's retained slot — zero copies), otherwise gathers the
+        matched columns from the live donor's row into a fresh slot.
+        Acquires the request's slot either way; ``add_request`` then
+        skips its own acquisition.  Returns the claimed token count."""
+        if not self.prefix_cache_enabled or not req.prompt_tokens:
+            return 0
+        bs = self.cache_block_size
+        cap = min(max_tokens, len(req.prompt_tokens) - 1,
+                  self.max_seq - 1) // bs
+        path = self._donors.match(req.prompt_tokens, cap) if cap > 0 else []
+        if not path:
+            return 0
+        donor = path[-1].bid                  # deepest node's row holds
+        h = len(path) * bs                    # the whole matched prefix
+        if self.slots.is_free(donor):
+            self.slots.acquire_slot(req.rid, donor)
+            self._donors.remove_bid(donor)
+            slot = donor
+            self.prefix_adoptions += 1
+        else:
+            slot = self._acquire_slot(req.rid)
+            self.cache = migrate.copy_prefix(self.cache, donor, slot, h)
+            self.prefix_copies += 1
+        # stale columns >= h are dead: masked by position until prefill/
+        # decode overwrites them in order (same argument as zero_row).
+        self.positions[slot] = h
+        self.last_token[slot] = 0
+        self._claimed.add(req.rid)
+        return h
+
     def add_request(self, req: Request):
-        if req.rid in getattr(self, "_preadded", set()):
+        if req.rid in self._preadded:
             # state already inserted by a migration (insert_state)
             self._preadded.discard(req.rid)
             return
-        slot = self.slots.acquire(req.rid)
+        if req.rid in self._claimed:
+            # slot acquired + prefix columns populated by claim_prefix;
+            # zeroing would wipe the inherited KV
+            self._claimed.discard(req.rid)
+            return
+        slot = self._acquire_slot(req.rid)
         self.cache = migrate.zero_row(self.cache, slot)
         self.positions[slot] = 0
         if req.prompt_tokens is None:
@@ -174,7 +234,31 @@ class JaxExecutor:
                                    size=req.prompt_len))
 
     def release(self, req: Request):
+        # the freed row keeps its donor registration: its prompt KV
+        # stays adoptable until the slot is reacquired
+        if req.rid in self._claimed and self.slots.has(req.rid):
+            # claim never consumed (admission unwound): the row's prefix
+            # columns are valid KV — re-register it as a retained donor
+            # instead of forfeiting what adoption deregistered
+            slot = self.slots.slot(req.rid)
+            h = int(self.positions[slot])
+            n = h // self.cache_block_size
+            if n > 0 and req.prompt_tokens:
+                self._donors.insert(
+                    req.prompt_tokens[:n * self.cache_block_size],
+                    [slot] * n)
+        self._claimed.discard(req.rid)
         self.slots.release(req.rid)
+
+    def _register_donor(self, req: Request, slot: int):
+        """Prefill complete: the row now holds valid KV for the whole
+        prompt — publish its full blocks to the donor index."""
+        if not self.prefix_cache_enabled or not req.prompt_tokens:
+            return
+        n = len(req.prompt_tokens) // self.cache_block_size
+        if n > 0:
+            self._donors.insert(
+                req.prompt_tokens[:n * self.cache_block_size], [slot] * n)
 
     # ------------------------------------------------------------------
     def _row_cache(self, slot: int):
@@ -247,6 +331,7 @@ class JaxExecutor:
                 tok = int(toks[i])
                 req.output_tokens.append(tok)
                 self.last_token[slot] = tok
+                self._register_donor(req, slot)
                 if self.eos_id is not None and tok == self.eos_id:
                     eos[req.rid] = True
 
@@ -264,6 +349,7 @@ class JaxExecutor:
                 tok = int(tok[0])
                 req.output_tokens.append(tok)
                 self.last_token[slot] = tok
+                self._register_donor(req, slot)
                 if self.eos_id is not None and tok == self.eos_id:
                     eos[req.rid] = True
 
@@ -289,6 +375,7 @@ class JaxExecutor:
                 tok = self._sample(last[0])
                 req.output_tokens.append(tok)
                 self.last_token[slot] = tok
+                self._register_donor(req, slot)
                 if self.eos_id is not None and tok == self.eos_id:
                     eos[req.rid] = True
         # --- decode (full slot batch, one call) ---
@@ -315,12 +402,11 @@ class JaxExecutor:
                 "last_token": int(self.last_token[slot])}
 
     def insert_state(self, req: Request, state):
-        slot = self.slots.acquire(req.rid)
+        slot = self._acquire_slot(req.rid)
         self.cache = migrate.insert_row(self.cache, state["row"], slot)
         self.positions[slot] = state["pos"]
         self.last_token[slot] = state["last_token"]
         # re-acquired below by add_request semantics: mark as pre-added
-        self._preadded = getattr(self, "_preadded", set())
         self._preadded.add(req.rid)
 
     def migration_bytes(self, req: Request) -> int:
@@ -338,6 +424,11 @@ class SimExecutor:
 
     def add_request(self, req: Request):
         pass
+
+    def claim_prefix(self, req: Request, max_tokens: int) -> int:
+        """No physical rows to gather — the instance-level block cache
+        is the full model of HBM retention in simulation."""
+        return max_tokens
 
     def release(self, req: Request):
         pass

@@ -100,12 +100,27 @@ class SlotTable:
         self._slot_of: Dict[int, int] = {}
         self._free = list(range(self.n_slots - 1, -1, -1))
 
-    def acquire(self, rid: int) -> int:
+    def acquire(self, rid: int, avoid=()) -> int:
+        """Pop a free slot; prefer one not in ``avoid`` (the engine's
+        retained prefix-donor slots) so cached rows survive longest."""
         if not self._free:
             raise OutOfBlocks("no free slots")
-        s = self._free.pop()
+        s = None
+        if avoid:
+            for i in range(len(self._free) - 1, -1, -1):
+                if self._free[i] not in avoid:
+                    s = self._free.pop(i)
+                    break
+        if s is None:
+            s = self._free.pop()
         self._slot_of[rid] = s
         return s
+
+    def acquire_slot(self, rid: int, slot: int) -> int:
+        """Claim a SPECIFIC free slot (prefix-donor adoption)."""
+        self._free.remove(slot)
+        self._slot_of[rid] = slot
+        return slot
 
     def release(self, rid: int) -> Optional[int]:
         s = self._slot_of.pop(rid, None)
@@ -122,6 +137,9 @@ class SlotTable:
 
     def has(self, rid: int) -> bool:
         return rid in self._slot_of
+
+    def is_free(self, slot: int) -> bool:
+        return slot in self._free
 
     @property
     def free_slots(self) -> int:

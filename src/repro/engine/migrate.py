@@ -36,6 +36,26 @@ def _insert(segments, row, slot):
 
 
 @jax.jit
+def _copy_prefix(segments, src, dst, n):
+    """Copy the first ``n`` cache columns of one batch row into another
+    (prefix-cache hit: the new request's slot inherits the donor's KV up
+    to the matched position).  Masked full-row copy so ``n`` stays a
+    traced scalar — one compile per cache structure, same dynamic
+    index/update ops as the migration row path."""
+    def cp(a):
+        srow = jax.lax.dynamic_index_in_dim(a, src, 1, keepdims=False)
+        drow = jax.lax.dynamic_index_in_dim(a, dst, 1, keepdims=False)
+        # row layout [n_periods, seq, ...]: mask along the seq axis
+        seq = srow.shape[1]
+        mask = (jnp.arange(seq) < n).reshape(
+            (1, seq) + (1,) * (srow.ndim - 2))
+        out = jnp.where(mask, srow, drow)
+        return jax.lax.dynamic_update_index_in_dim(
+            a, out.astype(a.dtype), dst, 1)
+    return jax.tree.map(cp, segments)
+
+
+@jax.jit
 def _zero(segments, slot):
     return jax.tree.map(
         lambda a: jax.lax.dynamic_update_index_in_dim(
@@ -51,6 +71,16 @@ def extract_row(cache, slot: int):
 def insert_row(cache, row, slot: int):
     """Insert an extracted row into a cache at ``slot``; returns new cache."""
     return {"segments": _insert(cache["segments"], row, jnp.int32(slot))}
+
+
+def copy_prefix(cache, src_slot: int, dst_slot: int, n_tokens: int):
+    """Gather the first ``n_tokens`` KV columns of ``src_slot`` into
+    ``dst_slot``.  Only valid for full-cache attention families (KV at
+    position p depends only on tokens [0, p] — recurrent/windowed state
+    cannot be sliced at a token boundary)."""
+    return {"segments": _copy_prefix(cache["segments"], jnp.int32(src_slot),
+                                     jnp.int32(dst_slot),
+                                     jnp.int32(n_tokens))}
 
 
 def zero_row(cache, slot: int):

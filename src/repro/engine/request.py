@@ -39,10 +39,16 @@ class Request:
     # hidden ground truth for the simulator (the SCHEDULER must never read
     # this — output length is unknown a priori; paper Challenge 2):
     hidden_output_len: Optional[int] = None
-    prompt_tokens: Optional[list] = None      # real engine only
+    prompt_tokens: Optional[list] = None      # real token ids (engine, or
+                                              # tokenized sim workloads)
+    # ground truth from the workload generator: how many leading tokens
+    # were emitted before in the same session/system-prompt group (the
+    # scheduler must never read this — it's for measuring prefix share):
+    shared_prefix_len: Optional[int] = None
 
     state: State = State.QUEUED
     prefill_pos: int = 0                      # prompt tokens processed
+    cached_prefix_len: int = 0                # tokens served from KV cache
     output_len: int = 0                       # tokens emitted so far
     output_tokens: List[int] = dataclasses.field(default_factory=list)
 

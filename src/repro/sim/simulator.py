@@ -27,6 +27,7 @@ class ServingConfig:
     hbm_blocks: int = 8192            # KV blocks per instance
     block_size: int = 16
     max_ctx: int = 16384
+    prefix_cache: bool = False        # shared-prefix KV cache per instance
 
 
 def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
@@ -40,7 +41,7 @@ def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
         # all instances identical: chunk = s_p everywhere, no D-heavy split
         s = Sliders(n_p=s.n_p + s.n_d, n_d=0, s_p=s.s_p, s_d=s.s_p)
         instances = build_instances(cost, s, factory, sc.hbm_blocks,
-                                    sc.block_size)
+                                    sc.block_size, sc.prefix_cache)
         policy = PDAggregationPolicy(instances, cost, slo.ttft, slo.tpot,
                                      seed=seed)
     elif sc.policy == "disaggregation":
@@ -48,12 +49,12 @@ def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
         # D: chunk 0 (never prefills)
         s = Sliders(n_p=s.n_p, n_d=s.n_d, s_p=sc.max_ctx, s_d=0)
         instances = build_instances(cost, s, factory, sc.hbm_blocks,
-                                    sc.block_size)
+                                    sc.block_size, sc.prefix_cache)
         policy = PDDisaggregationPolicy(instances, cost, slo.ttft, slo.tpot,
                                         seed=seed)
     elif sc.policy == "taichi":
         instances = build_instances(cost, s, factory, sc.hbm_blocks,
-                                    sc.block_size)
+                                    sc.block_size, sc.prefix_cache)
         policy = TaiChiPolicy(instances, cost, slo.ttft, slo.tpot,
                               sliders=s, seed=seed, **(taichi_flags or {}))
     else:

@@ -5,11 +5,17 @@ sample from lognormal length mixtures fitted to the paper's Fig 14
 histograms, with the paper's own filters (ShareGPT <= 2048 tokens,
 ArXiv <= 16384 tokens).  Arrivals are Poisson, as in the paper and in
 DistServe/Sarathi.
+
+``MultiTurnSpec`` additionally models the traffic family the prefix
+cache targets: sessions that re-send a shared system prompt plus the
+growing conversation history every turn, emitting REAL token-id streams
+(so block hashing sees actual content) with a controllable prefix-share
+ratio.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -27,12 +33,17 @@ class LengthDist:
         x = rng.lognormal(self.mu, self.sigma, size=n)
         return np.clip(x.astype(int), self.lo, self.hi)
 
+    def mean(self) -> float:
+        return float(np.exp(self.mu + self.sigma ** 2 / 2))
+
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
     name: str
     prompt: LengthDist
     output: LengthDist
+    tokenized: bool = False    # emit random token ids (no shared content
+    vocab_size: int = 32000    # — a prefix-share≈0 baseline for caching)
 
     def sample_requests(self, n: int, qps: float, seed: int = 0,
                         max_new_tokens: int = 4096) -> List[Request]:
@@ -43,9 +54,90 @@ class WorkloadSpec:
         olens = self.output.sample(rng, n)
         return [
             Request(prompt_len=int(p), max_new_tokens=max_new_tokens,
-                    arrival=float(t), hidden_output_len=int(o))
+                    arrival=float(t), hidden_output_len=int(o),
+                    prompt_tokens=(
+                        [int(x) for x in
+                         rng.integers(1, self.vocab_size, size=int(p))]
+                        if self.tokenized else None),
+                    shared_prefix_len=0 if self.tokenized else None)
             for p, o, t in zip(plens, olens, arrivals)
         ]
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTurnSpec:
+    """Multi-turn chat / agentic sessions with shared system prompts.
+
+    Each session draws one of ``n_system_prompts`` shared system
+    prefixes, then alternates user turns and (synthetic) assistant
+    replies; every turn re-sends system + full history + fresh user
+    tokens, so consecutive turns share a growing token prefix and
+    first turns share the system prompt across sessions.  Sessions
+    arrive Poisson at ``qps / mean_turns`` (request rate ≈ qps); turns
+    within a session are spaced by exponential think time.
+
+    Prefix share is controlled by the system-prompt length vs. the
+    fresh-user-turn length and the turn count; ``nominal share ≈
+    (system + history) / prompt`` is recorded per request in
+    ``Request.shared_prefix_len`` (generator ground truth — schedulers
+    must not read it)."""
+    name: str
+    user: LengthDist
+    output: LengthDist
+    system_prompt_len: int = 512
+    n_system_prompts: int = 4
+    turns: Tuple[int, int] = (2, 6)     # inclusive turns-per-session range
+    think_time: float = 2.0             # mean seconds between turns
+    vocab_size: int = 32000
+    max_prompt: int = 16384
+
+    @property
+    def mean_turns(self) -> float:
+        return (self.turns[0] + self.turns[1]) / 2.0
+
+    def sample_requests(self, n: int, qps: float, seed: int = 0,
+                        max_new_tokens: int = 4096) -> List[Request]:
+        rng = np.random.default_rng(seed)
+        systems = [
+            [int(x) for x in rng.integers(1, self.vocab_size,
+                                          size=self.system_prompt_len)]
+            for _ in range(self.n_system_prompts)]
+        reqs: List[Request] = []
+        t = 0.0
+        while len(reqs) < n:
+            t += rng.exponential(self.mean_turns / qps)
+            arr = t
+            n_turns = int(rng.integers(self.turns[0], self.turns[1] + 1))
+            history = list(systems[int(rng.integers(self.n_system_prompts))])
+            for turn in range(n_turns):
+                if len(reqs) >= n:
+                    break
+                u = int(self.user.sample(rng, 1)[0])
+                prompt = history + [
+                    int(x) for x in rng.integers(1, self.vocab_size, size=u)]
+                if len(prompt) > self.max_prompt:
+                    break                      # context budget: end session
+                o = int(self.output.sample(rng, 1)[0])
+                reqs.append(Request(
+                    prompt_len=len(prompt), max_new_tokens=max_new_tokens,
+                    arrival=arr, hidden_output_len=o,
+                    prompt_tokens=prompt,
+                    shared_prefix_len=len(history)))
+                # next turn re-sends this prompt + a synthetic stand-in
+                # for the assistant reply (sim outputs have no token ids)
+                history = prompt + [
+                    int(x) for x in rng.integers(1, self.vocab_size, size=o)]
+                arr += rng.exponential(self.think_time)
+        reqs.sort(key=lambda r: r.arrival)
+        return reqs
+
+
+def measured_prefix_share(reqs) -> float:
+    """Mean fraction of prompt tokens previously emitted in the same
+    session/system-prompt group (generator ground truth)."""
+    shares = [r.shared_prefix_len / r.prompt_len for r in reqs
+              if r.shared_prefix_len is not None and r.prompt_len > 0]
+    return float(np.mean(shares)) if shares else 0.0
 
 
 # ShareGPT-like (chatbot): median prompt ~ 250, long tail to 2048 (paper
@@ -64,4 +156,23 @@ ARXIV = WorkloadSpec(
     output=LengthDist(mu=5.0, sigma=0.6, lo=32, hi=1024),
 )
 
-WORKLOADS = {w.name: w for w in (SHAREGPT, ARXIV)}
+# Multi-turn chat: ~500-token shared system prompt, short fresh user
+# turns, history re-sent every turn — prefix share rises from ~0.65 on
+# first turns toward ~0.9 deep into a session.
+MULTITURN = MultiTurnSpec(
+    name="multiturn",
+    user=LengthDist(mu=5.2, sigma=0.7, lo=16, hi=1024),
+    output=LengthDist(mu=5.3, sigma=0.9, lo=4, hi=1024),
+    system_prompt_len=512, n_system_prompts=4, turns=(2, 6),
+    think_time=2.0)
+
+# Agentic loops: one long shared tool/system preamble, tiny fresh
+# deltas, many turns — the extreme prefix-share end.
+AGENTIC = MultiTurnSpec(
+    name="agentic",
+    user=LengthDist(mu=4.2, sigma=0.5, lo=8, hi=256),
+    output=LengthDist(mu=4.5, sigma=0.6, lo=8, hi=256),
+    system_prompt_len=2048, n_system_prompts=2, turns=(4, 10),
+    think_time=0.5)
+
+WORKLOADS = {w.name: w for w in (SHAREGPT, ARXIV, MULTITURN, AGENTIC)}

@@ -58,6 +58,7 @@ def test_pack_prefill_pads_rows_and_batch():
 
 jax = pytest.importorskip("jax")
 
+from repro.cache import PrefixCache                           # noqa: E402
 from repro.configs import reduced_config                      # noqa: E402
 from repro.core.estimator import CostModel                    # noqa: E402
 from repro.core.hw import InstanceSpec                        # noqa: E402
@@ -144,6 +145,123 @@ def test_batched_migration_round_trip_token_exact(setup):
         return req.output_tokens
 
     assert run_migrated(True) == run_migrated(False)
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache KV reuse: token-exact vs. the uncached oracle
+# ---------------------------------------------------------------------------
+
+def _run_sequenced(cfg, params, cost, waves, n_out, *, cached,
+                   batched=True, chunk=32, overlap=False):
+    """Run request ``waves`` on one instance.  The next wave is enqueued
+    once the previous wave's requests finish (``overlap=False`` —
+    retained-slot adoption) or as soon as they have their first token,
+    i.e. prefilled but still decoding (``overlap=True`` — live-donor
+    gather).  Returns (outputs in enqueue order, instance)."""
+    ex = JaxExecutor(cfg, params, n_slots=6, max_seq=256, batched=batched,
+                     prefix_cache=cached)
+    pc = PrefixCache(512, 16) if cached else None
+    inst = Instance(0, D_HEAVY, chunk, cost, ex, hbm_blocks=512,
+                    prefix_cache=pc)
+    all_reqs = []
+    now = 0.0
+    for wave in waves:
+        reqs = [Request(prompt_len=len(p), max_new_tokens=n_out,
+                        hidden_output_len=n_out, prompt_tokens=list(p))
+                for p in wave]
+        all_reqs.extend(reqs)
+        for r in reqs:
+            inst.enqueue_prefill(r)
+        ready = ((lambda: all(r.first_token_time is not None for r in reqs))
+                 if overlap else (lambda: all(r.done() for r in reqs)))
+        guard = 0
+        while not ready() and guard < 300:
+            dur, done, _ = inst.run_iteration(now)
+            now += dur
+            guard += 1
+            for r in done:
+                inst.admit_decode(r)
+        assert ready()
+    guard = 0
+    while not all(r.done() for r in all_reqs) and guard < 300:
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        guard += 1
+        for r in done:
+            inst.admit_decode(r)
+    assert all(r.done() for r in all_reqs)
+    return [r.output_tokens for r in all_reqs], inst
+
+
+@pytest.mark.slow
+def test_prefix_cache_adoption_token_exact(setup):
+    """A finished request's retained slot row is adopted by a later
+    request sharing its prefix — greedy outputs must match the uncached
+    row-wise oracle exactly."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(11)
+    shared = list(rng.integers(1, cfg.vocab_size, size=32))
+    waves = [[shared + list(rng.integers(1, cfg.vocab_size, size=9))],
+             [shared + list(rng.integers(1, cfg.vocab_size, size=17))],
+             [list(shared)]]                  # identical full prompt
+    ref, _ = _run_sequenced(cfg, params, cost, waves, 6, cached=False,
+                            batched=False)
+    got, inst = _run_sequenced(cfg, params, cost, waves, 6, cached=True)
+    assert got == ref
+    assert inst.cache_hits == 2
+    assert inst.executor.prefix_adoptions >= 1
+    # the identical-prompt hit is capped at prompt_len - 1 full blocks
+    assert inst.cached_prefill_tokens == 32 + 16
+
+
+@pytest.mark.slow
+def test_prefix_cache_live_donor_token_exact(setup):
+    """Concurrent requests sharing a prefix: the later one gathers the
+    matched KV columns from the LIVE donor's row (on-device masked
+    copy) — still token-exact, on both executor paths."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(13)
+    shared = list(rng.integers(1, cfg.vocab_size, size=48))
+    tails = [list(rng.integers(1, cfg.vocab_size, size=n))
+             for n in (5, 11, 21)]
+    # overlap: followers arrive while the donor is still decoding, so
+    # its slot is live and the matched columns must be gathered
+    waves = [[shared + tails[0]], [shared + tails[1]], [shared + tails[2]]]
+    ref, _ = _run_sequenced(cfg, params, cost, waves, 8, cached=False,
+                            batched=False, chunk=64, overlap=True)
+
+    got_b, inst_b = _run_sequenced(cfg, params, cost, waves, 8,
+                                   cached=True, chunk=64, overlap=True)
+    assert got_b == ref
+    assert inst_b.cache_hits >= 2
+    assert inst_b.executor.prefix_copies >= 1
+
+    got_r, inst_r = _run_sequenced(cfg, params, cost, waves, 8,
+                                   cached=True, batched=False, chunk=64,
+                                   overlap=True)
+    assert got_r == ref
+    assert inst_r.cache_hits >= 2
+
+
+@pytest.mark.slow
+def test_prefix_cache_noop_for_nonpackable(setup):
+    """Families whose state can't be sliced at a token boundary must
+    ignore the engine prefix cache (claim_prefix returns 0)."""
+    cfg = reduced_config("gemma3-1b")
+    assert not packable(cfg)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cost = CostModel(cfg, InstanceSpec(tp=1))
+    rng = np.random.default_rng(17)
+    shared = list(rng.integers(1, cfg.vocab_size, size=32))
+    waves = [[shared + list(rng.integers(1, cfg.vocab_size, size=9))],
+             [shared + list(rng.integers(1, cfg.vocab_size, size=13))]]
+    ref, _ = _run_sequenced(cfg, params, cost, waves, 4, cached=False,
+                            batched=False, chunk=16)
+    got, inst = _run_sequenced(cfg, params, cost, waves, 4, cached=True,
+                               chunk=16)
+    assert got == ref
+    assert not inst.executor.prefix_cache_enabled
+    assert inst.cached_prefill_tokens == 0     # engine refused the claim
 
 
 @pytest.mark.slow

@@ -1,0 +1,348 @@
+"""Shared-prefix KV-cache subsystem: tree matching, instance-level
+acquire/commit/release lifecycle, LRU leaf eviction, cache-aware proxy
+routing, and end-to-end simulator behavior (hits reduce TTFT; a
+prefix-share-0 workload is bit-identical to cache-off)."""
+import dataclasses
+
+import pytest
+
+from repro.cache import PrefixCache, PrefixTree, chain_hashes
+from repro.core.estimator import CostModel
+from repro.core.hw import InstanceSpec
+from repro.core.instance import D_HEAVY, Instance, P_HEAVY
+from repro.core.latency import SLO
+from repro.core.policies import Sliders, build_instances
+from repro.core.proxy import Proxy
+from repro.configs import get_config
+from repro.engine.engine import SimExecutor
+from repro.engine.request import Request
+from repro.sim.simulator import ServingConfig, run_sim
+from repro.sim.workload import (AGENTIC, MULTITURN, SHAREGPT,
+                                measured_prefix_share)
+
+BS = 4
+
+
+def toks(*xs):
+    return list(xs)
+
+
+# ---------------------------------------------------------------------------
+# prefix tree
+# ---------------------------------------------------------------------------
+
+def test_chain_hashes_full_blocks_only():
+    assert len(list(chain_hashes(range(11), 4))) == 2
+    a = list(chain_hashes([1, 2, 3, 4, 5, 6, 7, 8], 4))
+    b = list(chain_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4))
+    assert a[0][0] == b[0][0]          # shared first block, same chain
+    assert a[1][0] != b[1][0]          # divergent second block
+
+
+def test_tree_match_longest_prefix():
+    t = PrefixTree(BS)
+    base = toks(*range(1, 13))                     # 3 full blocks
+    t.insert(base, ["b0", "b1", "b2"])
+    assert [n.bid for n in t.match(base)] == ["b0", "b1", "b2"]
+    # diverging third block matches 2
+    other = base[:8] + [99, 98, 97, 96]
+    assert [n.bid for n in t.match(other)] == ["b0", "b1"]
+    # partial final block never matches
+    assert [n.bid for n in t.match(base[:11])] == ["b0", "b1"]
+    assert t.match(toks(50, 51, 52, 53)) == []
+    # max_blocks caps the walk
+    assert len(t.match(base, max_blocks=1)) == 1
+
+
+def test_tree_first_writer_wins_and_remove():
+    t = PrefixTree(BS)
+    base = toks(*range(1, 9))
+    assert t.insert(base, ["x0", "x1"]) == ["x0", "x1"]
+    assert t.insert(base, ["y0", "y1"]) == []      # positions taken
+    t.insert(base + toks(21, 22, 23, 24), ["x0", "x1", "z2"])
+    t.remove_bid("x1")                             # prune mid-chain
+    assert [n.bid for n in t.match(base)] == ["x0"]
+    # the detached subtree (z2) is unmatchable and pruned from the index
+    assert not t.holds("z2")
+    assert t.node_count == 1
+
+
+# ---------------------------------------------------------------------------
+# prefix cache lifecycle
+# ---------------------------------------------------------------------------
+
+def test_acquire_commit_release_hit_cycle():
+    pc = PrefixCache(num_blocks=64, block_size=BS)
+    prompt = toks(*range(1, 17))                   # 4 full blocks
+    assert pc.match_tokens(prompt) == 0
+    assert pc.acquire(1, prompt, 0, len(prompt) + 8)
+    pc.commit(1, prompt)
+    # while rid 1 is live its blocks are shareable (refcount 1 -> 2)
+    hit = pc.match_tokens(prompt)
+    assert hit == 12                               # capped at len-1 blocks
+    assert pc.acquire(2, prompt, hit, len(prompt) + 8)
+    assert pc.allocator.refcount(pc.allocator.owned(1)[0]) == 2
+    pc.release(1)
+    assert pc.allocator.refcount(pc.allocator.owned(2)[0]) == 1
+    pc.release(2)
+    # all registered blocks retained: a third request still hits
+    assert pc.match_tokens(prompt) == 12
+    assert pc.allocator.used_blocks == 0
+
+
+def test_lru_eviction_prefers_leaves_and_reclaims():
+    pc = PrefixCache(num_blocks=8, block_size=BS)
+    p1 = toks(*range(1, 17))                       # 4 blocks
+    assert pc.acquire(1, p1, 0, 16)
+    pc.commit(1, p1)
+    pc.release(1)
+    assert pc.allocator.cached_blocks == 4
+    # demand 6 fresh blocks: 4 free + evict 2 cached, suffix-first
+    assert pc.acquire(2, toks(*range(101, 125)), 0, 24)
+    assert pc.allocator.eviction_count == 2
+    assert pc.match_tokens(p1) == 8                # prefix survives, tail gone
+
+
+def test_acquire_fails_only_when_unevictable():
+    pc = PrefixCache(num_blocks=4, block_size=BS)
+    p = toks(*range(1, 17))
+    assert pc.acquire(1, p, 0, 16)
+    assert not pc.acquire(2, p, 0, 16)             # all blocks referenced
+    pc.commit(1, p)
+    hit = pc.match_tokens(p)
+    assert hit == 12
+    # sharing makes it admissible: 3 shared + 1 fresh... but the only
+    # "fresh" candidate is the donor's own 4th block (refcount 1) — not
+    # evictable, so admission must still fail, never steal it
+    assert not pc.acquire(2, p, hit, 16)
+    pc.release(1)
+    assert pc.acquire(2, p, pc.match_tokens(p), 16)
+
+
+def test_deep_chains_no_recursion_limit():
+    """16k-token contexts at block 16 give 1000+-deep chains: eviction
+    walks and subtree pruning must not hit Python's recursion limit."""
+    pc = PrefixCache(num_blocks=2000, block_size=1)
+    p1 = list(range(1, 1502))                      # 1501-deep chain
+    assert pc.acquire(1, p1, 0, len(p1))
+    pc.commit(1, p1)
+    pc.release(1)
+    # demand forces ~1000 leaf-first evictions, each walking the chain
+    assert pc.acquire(2, list(range(5000, 6500)), 0, 1500)
+    assert pc.allocator.eviction_count >= 1000
+    # pruning a near-root node detaches the whole remaining chain
+    pc.tree.remove_bid(pc.matched_bids(p1, 1)[0])
+    assert pc.match_tokens(p1) == 0
+
+
+def test_peek_does_not_perturb_lru_order():
+    """Routing peeks probe every instance; they must not refresh LRU
+    recency, or probe-only blocks outlive genuinely reused ones."""
+    pc = PrefixCache(num_blocks=10, block_size=BS)
+    old = toks(*range(1, 13))                      # 3 blocks, committed first
+    new = toks(*range(101, 113))
+    assert pc.acquire(1, old, 0, 12)
+    pc.commit(1, old)
+    pc.release(1)
+    assert pc.acquire(2, new, 0, 12)
+    pc.commit(2, new)
+    pc.release(2)
+    for _ in range(50):
+        assert pc.match_tokens(old) == 8           # peek spam on `old`
+    # two blocks must be reclaimed: both come off `old`'s tail (its
+    # leaves are least recently USED), peeks notwithstanding
+    assert pc.acquire(3, toks(*range(201, 225)), 0, 24)
+    assert pc.match_tokens(old) == 4
+    assert pc.match_tokens(new) == 8
+
+
+# ---------------------------------------------------------------------------
+# instance admission + cost accounting
+# ---------------------------------------------------------------------------
+
+def make_instance(iid=0, itype=D_HEAVY, chunk=256, blocks=512,
+                  prefix=True):
+    cost = CostModel(get_config("qwen2.5-14b"), InstanceSpec(tp=4))
+    pc = PrefixCache(blocks, BS) if prefix else None
+    return Instance(iid, itype, chunk, cost, SimExecutor(),
+                    hbm_blocks=blocks, block_size=BS, prefix_cache=pc)
+
+
+def run_to_first_token(inst, req):
+    now, guard = 0.0, 0
+    while req.first_token_time is None and guard < 200:
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        guard += 1
+        for r in done:
+            inst.admit_decode(r)
+    return now
+
+
+def test_instance_prefill_starts_at_matched_position():
+    inst = make_instance()
+    prompt = toks(*range(1, 101))
+    r1 = Request(prompt_len=100, max_new_tokens=4, hidden_output_len=4,
+                 prompt_tokens=list(prompt))
+    inst.enqueue_prefill(r1)
+    t1 = run_to_first_token(inst, r1)
+    assert r1.cached_prefix_len == 0
+    r2 = Request(prompt_len=100, max_new_tokens=4, hidden_output_len=4,
+                 prompt_tokens=list(prompt))
+    inst.enqueue_prefill(r2)
+    t2 = run_to_first_token(inst, r2) - t1
+    assert r2.cached_prefix_len == 96              # (100-1) // 4 * 4
+    assert inst.cache_hits == 1 and inst.cache_lookups == 2
+    assert inst.cached_prefill_tokens == 96
+    # cost model charged only the uncached tokens: much faster TTFT
+    assert t2 < t1 * 0.5
+    # prefill token counter counts only recomputed tokens
+    assert inst.prefill_token_count == 100 + 4
+
+
+def test_blocked_admission_counts_one_lookup():
+    """A head-of-line request retried while memory-blocked must count
+    ONE cache lookup (at admission), not one per retry — else hit rate
+    is deflated exactly at the saturation points benchmarks measure."""
+    inst = make_instance(blocks=32)                # 128 tokens capacity
+    prompt = toks(*range(1, 41))
+    r1 = Request(prompt_len=40, max_new_tokens=20, hidden_output_len=20,
+                 prompt_tokens=list(prompt))
+    inst.enqueue_prefill(r1)
+    now = run_to_first_token(inst, r1)
+    inst.admit_decode(r1)
+    r2 = Request(prompt_len=40, max_new_tokens=2, hidden_output_len=2,
+                 prompt_tokens=list(prompt))
+    inst.enqueue_prefill(r2)                       # blocked: r1 holds 26/32
+    blocked_iters = 0
+    guard = 0
+    while not r2.done() and guard < 200:
+        if not inst.allocator.holds(r2.rid) and not r2.done():
+            blocked_iters += 1
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        guard += 1
+        for r in done:
+            inst.admit_decode(r)
+    assert r2.done()
+    assert blocked_iters > 3                       # it WAS retried
+    assert inst.cache_lookups == 2                 # one per admission
+    assert inst.cache_hits == 1                    # r2 hit r1's prompt
+    assert r2.cached_prefix_len == 36
+
+
+def test_peek_prefix_is_pure():
+    inst = make_instance()
+    prompt = toks(*range(1, 41))
+    r1 = Request(prompt_len=40, max_new_tokens=2, hidden_output_len=2,
+                 prompt_tokens=list(prompt))
+    inst.enqueue_prefill(r1)
+    run_to_first_token(inst, r1)
+    free = inst.allocator.free_blocks
+    probe = Request(prompt_len=40, max_new_tokens=2,
+                    prompt_tokens=list(prompt))
+    assert inst.peek_prefix(probe) == 36
+    assert inst.peek_prefix(probe) == 36           # idempotent
+    assert inst.allocator.free_blocks == free      # no side effects
+
+
+# ---------------------------------------------------------------------------
+# cache-aware routing
+# ---------------------------------------------------------------------------
+
+def test_routing_tie_breaks_toward_prefix_holder():
+    cost = CostModel(get_config("qwen2.5-14b"), InstanceSpec(tp=4))
+    insts = build_instances(cost, Sliders(0, 2, 256, 256),
+                            lambda: SimExecutor(), hbm_blocks=512,
+                            block_size=BS, prefix_cache=True)
+    proxy = Proxy(insts, cost, ttft_slo=100.0)
+    prompt = toks(*range(1, 101))
+    warm = Request(prompt_len=100, max_new_tokens=2, hidden_output_len=2,
+                   prompt_tokens=list(prompt))
+    insts[1].enqueue_prefill(warm)
+    run_to_first_token(insts[1], warm)
+    # equal queues (both empty): the prefix holder must win the tie
+    req = Request(prompt_len=100, max_new_tokens=2,
+                  prompt_tokens=list(prompt))
+    assert proxy.schedule_prefill(req, 0.0) is insts[1]
+    # cache-awareness off: same tie now falls to the first instance
+    proxy.cache_aware = False
+    req2 = Request(prompt_len=100, max_new_tokens=2,
+                   prompt_tokens=list(prompt))
+    assert proxy.schedule_prefill(req2, 0.0) is insts[0]
+
+
+def test_cache_hit_extends_feasibility():
+    """A long prompt infeasible from scratch becomes feasible on the
+    instance holding its prefix (the latency-shifting interaction)."""
+    cost = CostModel(get_config("qwen2.5-14b"), InstanceSpec(tp=4))
+    insts = build_instances(cost, Sliders(1, 1, 1024, 256),
+                            lambda: SimExecutor(), hbm_blocks=2048,
+                            block_size=BS, prefix_cache=True)
+    prompt = toks(*range(1, 4001))
+    warm = Request(prompt_len=4000, max_new_tokens=2, hidden_output_len=2,
+                   prompt_tokens=list(prompt))
+    insts[1].enqueue_prefill(warm)              # warm the D-heavy instance
+    run_to_first_token(insts[1], warm)
+    full = cost.prefill_time(4000, insts[1].chunk_size)
+    resid = cost.prefill_time(4000 - insts[1].peek_prefix(
+        Request(prompt_len=4000, max_new_tokens=2,
+                prompt_tokens=list(prompt))), insts[1].chunk_size)
+    # SLO between residual-prefill time and full-prefill time
+    proxy = Proxy(insts, cost, ttft_slo=(resid + full) / 2)
+    req = Request(prompt_len=4000, max_new_tokens=2,
+                  prompt_tokens=list(prompt))
+    chosen = proxy.schedule_prefill(req, 0.0)
+    assert chosen is insts[1]
+    assert proxy.infeasible_count == 0
+    # without awareness the same request is infeasible everywhere
+    proxy2 = Proxy(insts, cost, ttft_slo=(resid + full) / 2,
+                   cache_aware=False)
+    req2 = Request(prompt_len=4000, max_new_tokens=2,
+                   prompt_tokens=list(prompt))
+    proxy2.schedule_prefill(req2, 0.0)
+    assert proxy2.infeasible_count == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end simulation
+# ---------------------------------------------------------------------------
+
+SLO_E2E = SLO(ttft=2.0, tpot=0.05)
+
+
+def test_multiturn_workload_emits_shared_token_streams():
+    reqs = MULTITURN.sample_requests(80, 8.0, seed=3)
+    assert len(reqs) == 80
+    assert all(r.prompt_tokens is not None
+               and len(r.prompt_tokens) == r.prompt_len for r in reqs)
+    assert all(r.arrival <= b.arrival for r, b in zip(reqs, reqs[1:]))
+    assert measured_prefix_share(reqs) >= 0.5
+    assert measured_prefix_share(AGENTIC.sample_requests(80, 8.0)) >= 0.7
+
+
+def test_sim_cache_reduces_ttft_and_reports_hits():
+    sc = ServingConfig(policy="taichi", sliders=Sliders(2, 2, 1024, 256))
+    off = run_sim(sc, SLO_E2E, MULTITURN, qps=8.0, n_requests=100)
+    on = run_sim(dataclasses.replace(sc, prefix_cache=True), SLO_E2E,
+                 MULTITURN, qps=8.0, n_requests=100)
+    assert on.cache_lookups > 0
+    assert on.cache_hit_rate > 0.5
+    assert on.saved_prefill_tokens > 0
+    assert on.mean_ttft < off.mean_ttft * 0.7
+    assert off.cache_lookups == 0 and off.cache_hit_rate == 0.0
+
+
+def test_sim_zero_share_bit_identical_to_cache_off():
+    """Acceptance: with the cache ENABLED, a prefix-share-0 (tokenized,
+    all-random) workload reproduces today's results bit-exactly."""
+    tokenized = dataclasses.replace(SHAREGPT, tokenized=True)
+    sc = ServingConfig(policy="taichi", sliders=Sliders(2, 2, 1024, 256))
+    off = run_sim(sc, SLO_E2E, tokenized, qps=40.0, n_requests=120)
+    on = run_sim(dataclasses.replace(sc, prefix_cache=True), SLO_E2E,
+                 tokenized, qps=40.0, n_requests=120)
+    key = lambda st: [(r.ttft(), r.tpot(), r.finish_time, r.output_len,
+                       r.n_migrations) for r in st.reqs]
+    assert key(on) == key(off)
+    assert on.cache_hits == 0
+    assert on.slo_attainment == off.slo_attainment

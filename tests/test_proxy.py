@@ -1,0 +1,122 @@
+"""Direct unit tests for Proxy.schedule_prefill: the early-rejection
+path, the random infeasible-fallback path (with counter accounting),
+and the feasible-set selection rule — previously only exercised
+indirectly through test_autotune.py."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.estimator import CostModel
+from repro.core.hw import InstanceSpec
+from repro.core.instance import D_HEAVY, Instance, P_HEAVY
+from repro.core.proxy import Proxy
+from repro.engine.engine import SimExecutor
+from repro.engine.request import Request
+
+
+@pytest.fixture(scope="module")
+def cost():
+    return CostModel(get_config("qwen2.5-14b"), InstanceSpec(tp=4))
+
+
+def make_pool(cost, chunks=(1024, 1024, 256, 256)):
+    types = [P_HEAVY, P_HEAVY, D_HEAVY, D_HEAVY]
+    return [Instance(i, t, c, cost, SimExecutor(), hbm_blocks=1024)
+            for i, (t, c) in enumerate(zip(types, chunks))]
+
+
+def req(plen=300):
+    return Request(prompt_len=plen, max_new_tokens=64)
+
+
+# ---------------------------------------------------------------------------
+# feasible path
+# ---------------------------------------------------------------------------
+
+def test_picks_fewest_queued_tokens(cost):
+    insts = make_pool(cost)
+    proxy = Proxy(insts, cost, ttft_slo=1e9)
+    insts[0].enqueue_prefill(req(500))
+    insts[1].enqueue_prefill(req(200))
+    insts[2].enqueue_prefill(req(100))
+    insts[3].enqueue_prefill(req(400))
+    chosen = proxy.schedule_prefill(req(), now=0.0)
+    assert chosen is insts[2]
+    assert proxy.infeasible_count == 0 and proxy.rejected_count == 0
+
+
+def test_tie_breaks_toward_d_heavy(cost):
+    insts = make_pool(cost)                  # all queues empty: 4-way tie
+    proxy = Proxy(insts, cost, ttft_slo=1e9)
+    assert proxy.schedule_prefill(req(), now=0.0).itype == D_HEAVY
+
+
+def test_pure_decode_instances_excluded(cost):
+    insts = make_pool(cost, chunks=(1024, 1024, 0, 0))
+    proxy = Proxy(insts, cost, ttft_slo=1e9)
+    for _ in range(8):
+        assert proxy.schedule_prefill(req(), now=0.0).chunk_size > 0
+
+
+def test_infeasible_instance_filtered_by_slo(cost):
+    """SLO between D-heavy (slow small-chunk) and P-heavy prefill time:
+    only P-heavy instances are feasible despite D's shorter queue."""
+    insts = make_pool(cost)
+    t_p = cost.prefill_time(3000, 1024) + cost.transfer_time(3000)
+    t_d = cost.prefill_time(3000, 256)
+    assert t_p < t_d
+    proxy = Proxy(insts, cost, ttft_slo=(t_p + t_d) / 2)
+    chosen = proxy.schedule_prefill(req(3000), now=0.0)
+    assert chosen.itype == P_HEAVY
+    assert proxy.infeasible_count == 0
+
+
+# ---------------------------------------------------------------------------
+# infeasible: random fallback (default) vs early rejection
+# ---------------------------------------------------------------------------
+
+def test_random_fallback_assigns_and_counts(cost):
+    insts = make_pool(cost)
+    proxy = Proxy(insts, cost, ttft_slo=1e-9, seed=7)
+    hits = set()
+    for i in range(24):
+        r = req()
+        chosen = proxy.schedule_prefill(r, now=float(i))
+        assert chosen is not None and chosen.chunk_size > 0
+        assert r in chosen.prefill_queue
+        hits.add(chosen.iid)
+    assert proxy.infeasible_count == 24
+    assert proxy.rejected_count == 0             # fallback, not rejection
+    assert len(hits) > 1                         # actually random across pool
+
+
+def test_random_fallback_skips_pure_decode(cost):
+    insts = make_pool(cost, chunks=(1024, 1024, 0, 0))
+    proxy = Proxy(insts, cost, ttft_slo=1e-9, seed=3)
+    for i in range(16):
+        assert proxy.schedule_prefill(req(), now=float(i)).chunk_size > 0
+
+
+def test_random_fallback_deterministic_per_seed(cost):
+    def route(seed):
+        proxy = Proxy(make_pool(cost), cost, ttft_slo=1e-9, seed=seed)
+        return [proxy.schedule_prefill(req(), now=0.0).iid
+                for _ in range(12)]
+    assert route(11) == route(11)
+    assert route(11) != route(12)
+
+
+def test_early_rejection_returns_none_and_counts(cost):
+    insts = make_pool(cost)
+    proxy = Proxy(insts, cost, ttft_slo=1e-9, early_rejection=True)
+    for i in range(5):
+        assert proxy.schedule_prefill(req(), now=float(i)) is None
+    assert proxy.rejected_count == 5
+    assert proxy.infeasible_count == 5           # rejections ARE infeasible
+    assert all(not i.prefill_queue for i in insts)
+
+
+def test_early_rejection_inactive_when_feasible(cost):
+    proxy = Proxy(make_pool(cost), cost, ttft_slo=1e9,
+                  early_rejection=True)
+    assert proxy.schedule_prefill(req(), now=0.0) is not None
+    assert proxy.rejected_count == 0 and proxy.infeasible_count == 0
