@@ -1,11 +1,15 @@
-"""Engine executor benchmark: batched packed path vs. row-wise reference.
+"""Engine executor benchmark: paged fused mixed-batch path vs. batched
+dense path vs. row-wise reference.
 
 Measures, on a reduced CPU config (so it runs anywhere; the same jit
 variants lower for the TPU meshes):
 
   * prefill tokens/s — N requests with uneven prompt lengths, chunked
     prefill, no decode mixed in;
-  * decode steps/s — full decode batch iterations after all prefills.
+  * decode steps/s — full decode batch iterations after all prefills;
+  * peak KV-cache bytes — dense paths reserve ``n_slots x max_seq``
+    rows; the paged pool is sized to the workload's actual contexts
+    (same slot count), which is where the paged memory win shows up.
 
 Both executors are warmed up on an identical workload first so compile
 time is excluded; the comparison is steady-state dispatch + execution.
@@ -31,11 +35,18 @@ from repro.models import transformer as tf
 
 N_REQS = 8
 CHUNK = 256
+MAX_SEQ = 512
+BLOCK = 16
 DECODE_ITERS = 32
+# paged pool: half the dense token capacity at the SAME slot count —
+# contexts here peak around 225 tokens (prompt + decode + headroom), so
+# 2048 pooled tokens hold all 8 requests with room to spare while the
+# dense paths reserve 8 x 512 = 4096
+PAGED_BLOCKS = N_REQS * MAX_SEQ // (2 * BLOCK)
 # prompt lengths are drawn per pass: production traffic has unbounded
 # length diversity, so the timed "fresh" pass uses lengths the executor
 # has never seen — the row-wise path recompiles per distinct chunk
-# length, the batched path hits its warm (B, T) buckets.
+# length, the batched/paged paths hit their warm bucketed shapes.
 LEN_RANGE = (40, 161)
 
 
@@ -56,7 +67,7 @@ def _run_phases(inst, ex, cfg, seed: int):
     reqs = _make_requests(cfg, rng)
     for r in reqs:
         inst.enqueue_prefill(r)
-    jax.block_until_ready(ex.cache["segments"])
+    ex.sync()
 
     t0 = time.perf_counter()
     now, guard = 0.0, 0
@@ -64,7 +75,7 @@ def _run_phases(inst, ex, cfg, seed: int):
         dur, _, _ = inst.run_iteration(now)
         now += dur
         guard += 1
-    jax.block_until_ready(ex.cache["segments"])
+    ex.sync()
     prefill_s = time.perf_counter() - t0
     prefill_tokens = sum(r.prompt_len for r in reqs)
 
@@ -73,11 +84,19 @@ def _run_phases(inst, ex, cfg, seed: int):
     t0 = time.perf_counter()
     for _ in range(DECODE_ITERS):
         inst.run_iteration(now)
-    jax.block_until_ready(ex.cache["segments"])
+    ex.sync()
     decode_s = time.perf_counter() - t0
     for r in reqs:                      # free slots/blocks for the next pass
         inst.remove_request(r)
     return prefill_s, prefill_tokens, decode_s, DECODE_ITERS * len(reqs)
+
+
+VARIANTS = (
+    # name, batched, paged, hbm_blocks (paged pool size)
+    ("rowwise", False, False, None),
+    ("batched", True, False, None),
+    ("paged", True, True, PAGED_BLOCKS),
+)
 
 
 def run(model: str = "smollm-135m"):
@@ -85,10 +104,14 @@ def run(model: str = "smollm-135m"):
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     cost = CostModel(cfg, InstanceSpec(tp=1))
     results = {}
-    for name, batched in (("rowwise", False), ("batched", True)):
-        ex = JaxExecutor(cfg, params, n_slots=N_REQS, max_seq=512,
-                         batched=batched)
-        inst = Instance(0, D_HEAVY, CHUNK, cost, ex, hbm_blocks=4096)
+    cache_bytes = {}
+    for name, batched, paged, blocks in VARIANTS:
+        ex = JaxExecutor(cfg, params, n_slots=N_REQS, max_seq=MAX_SEQ,
+                         batched=batched, paged=paged, hbm_blocks=blocks,
+                         cache_block_size=BLOCK)
+        inst = Instance(0, D_HEAVY, CHUNK, cost, ex, hbm_blocks=4096,
+                        block_size=BLOCK)
+        cache_bytes[name] = ex.cache_bytes()
         _run_phases(inst, ex, cfg, seed=11)           # warmup pass
         # fresh pass: unseen prompt lengths (what serving traffic does)
         fps, fptk, _, _ = _run_phases(inst, ex, cfg, seed=12)
@@ -101,22 +124,34 @@ def run(model: str = "smollm-135m"):
              f"tokens_per_s={ptk / ps:.1f};model={model};chunk={CHUNK}")
         emit(f"engine.{name}.decode", ds / dst * 1e6,
              f"steps_per_s={dst / ds:.1f};model={model};batch={N_REQS}")
+        emit(f"engine.{name}.cache_bytes", 0.0,
+             f"bytes={cache_bytes[name]};slots={N_REQS};max_seq={MAX_SEQ}")
     fresh_x = results["batched"][0] / results["rowwise"][0]
     steady_x = results["batched"][1] / results["rowwise"][1]
     decode_x = results["batched"][2] / results["rowwise"][2]
+    paged_decode_x = results["paged"][2] / results["batched"][2]
+    paged_prefill_x = results["paged"][1] / results["batched"][1]
+    cache_reduction_x = cache_bytes["batched"] / cache_bytes["paged"]
     emit("engine.speedup", 0.0,
          f"prefill_fresh_x={fresh_x:.2f};prefill_steady_x={steady_x:.2f};"
-         f"decode_x={decode_x:.2f}")
+         f"decode_x={decode_x:.2f};paged_decode_x={paged_decode_x:.2f};"
+         f"paged_cache_reduction_x={cache_reduction_x:.2f}")
     write_json("engine_bench", {
         "model": model, "chunk": CHUNK, "n_reqs": N_REQS,
+        "max_seq": MAX_SEQ, "block_size": BLOCK,
+        "paged_pool_blocks": PAGED_BLOCKS,
         "tokens_per_s": {
             name: {"prefill_fresh": round(r[0], 1),
                    "prefill_steady": round(r[1], 1),
                    "decode_steps_per_s": round(r[2], 1)}
             for name, r in results.items()},
+        "peak_cache_bytes": cache_bytes,
         "speedup": {"prefill_fresh_x": round(fresh_x, 2),
                     "prefill_steady_x": round(steady_x, 2),
-                    "decode_x": round(decode_x, 2)},
+                    "decode_x": round(decode_x, 2),
+                    "paged_vs_batched_decode_x": round(paged_decode_x, 2),
+                    "paged_vs_batched_prefill_x": round(paged_prefill_x, 2),
+                    "paged_cache_reduction_x": round(cache_reduction_x, 2)},
     })
     return fresh_x, steady_x, decode_x
 

@@ -1,15 +1,19 @@
 """Kernel microbenchmarks (interpret mode on CPU — wall time is NOT
 TPU-representative; the derived column reports the work description and
-FLOPs so the roofline table can relate them to v5e peaks)."""
+FLOPs so the roofline table can relate them to v5e peaks).  Dense and
+paged variants run the same logical attention so the JSON artifact
+tracks the paged kernels' overhead trajectory."""
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro.kernels.chunked_prefill_attention.ops import (
-    chunked_prefill_attention)
-from repro.kernels.decode_attention.ops import decode_attention
+    chunked_prefill_attention, paged_chunked_prefill_attention)
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                paged_decode_attention)
 from repro.kernels.ssd_scan.ops import ssd_scan
 
 
@@ -25,6 +29,7 @@ def _time(fn, *args, reps=3, **kw):
 
 def run():
     key = jax.random.PRNGKey(0)
+    results = {}
     # chunked prefill attention: chunk 128 against 1k prefix
     B, Tq, Hq, Hkv, D, S = 1, 128, 8, 8, 128, 1152
     ks = jax.random.split(key, 3)
@@ -35,9 +40,25 @@ def run():
     flops = 4 * B * Tq * Hq * D * S
     emit("kernel.chunked_prefill_attention", us,
          f"interpret=True;flops={flops};shape=B{B}xT{Tq}xH{Hq}xS{S}")
+    results["chunked_prefill_us"] = round(us, 1)
+
+    # paged chunked prefill: same logical work through block tables
+    bs = 64
+    n_blk = S // bs
+    kp = k[0].reshape(S, Hkv, D)
+    vp = v[0].reshape(S, Hkv, D)
+    tables = jnp.arange(n_blk, dtype=jnp.int32)[None]
+    start = jnp.full((B,), 1024, jnp.int32)
+    valid = jnp.full((B,), Tq, jnp.int32)
+    us = _time(paged_chunked_prefill_attention, q, kp, vp, tables, start,
+               valid, block_size=bs)
+    emit("kernel.paged_prefill_attention", us,
+         f"interpret=True;flops={flops};shape=B{B}xT{Tq}xH{Hq}xS{S};bs={bs}")
+    results["paged_prefill_us"] = round(us, 1)
 
     # decode attention: 32 sequences, 2k cache
     B, Hq, Hkv, D, S = 32, 8, 2, 128, 2048
+    ks = jax.random.split(key, 5)
     q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
@@ -45,6 +66,21 @@ def run():
     us = _time(decode_attention, q, k, v, lengths, bk=512)
     emit("kernel.decode_attention", us,
          f"interpret=True;flops={4*B*Hq*D*S};shape=B{B}xH{Hq}xS{S}")
+    results["decode_us"] = round(us, 1)
+
+    # paged decode: one shared pool, per-sequence block tables
+    bs = 256
+    n_blk = B * S // bs
+    kp = k.reshape(B * S, Hkv, D)
+    vp = v.reshape(B * S, Hkv, D)
+    per_seq = S // bs
+    tables = jnp.asarray(
+        np.arange(n_blk, dtype=np.int32).reshape(B, per_seq))
+    us = _time(paged_decode_attention, q, kp, vp, tables, lengths,
+               block_size=bs)
+    emit("kernel.paged_decode_attention", us,
+         f"interpret=True;flops={4*B*Hq*D*S};shape=B{B}xH{Hq}xS{S};bs={bs}")
+    results["paged_decode_us"] = round(us, 1)
 
     # ssd scan: mamba2-1.3b-like single layer slice
     b, t, h, p, g, n = 2, 512, 8, 64, 1, 128
@@ -57,6 +93,9 @@ def run():
     us = _time(ssd_scan, x, dt, A, Bm, Cm, 128, None)
     emit("kernel.ssd_scan", us,
          f"interpret=True;chunk=128;shape=b{b}xt{t}xh{h}xp{p}xn{n}")
+    results["ssd_scan_us"] = round(us, 1)
+
+    write_json("kernel_bench", {"interpret": True, "timings_us": results})
 
 
 if __name__ == "__main__":

@@ -81,6 +81,10 @@ class SharedBlockAllocator:
     def owned(self, rid: int) -> List[int]:
         return list(self._owned.get(rid, ()))
 
+    def owned_count(self, rid: int) -> int:
+        """len(owned(rid)) without copying the list (hot-path probe)."""
+        return len(self._owned.get(rid, ()))
+
     def bytes_owned(self, rid: int, bytes_per_token: int) -> int:
         return (len(self._owned.get(rid, ()))
                 * self.block_size * bytes_per_token)
@@ -134,8 +138,14 @@ class SharedBlockAllocator:
         if held is None:
             raise KeyError(rid)
         extra = self.blocks_for(tokens) - len(held)
-        for _ in range(max(extra, 0)):
-            bid = self._take_fresh()
+        fresh: List[int] = []
+        try:
+            for _ in range(max(extra, 0)):
+                fresh.append(self._take_fresh())
+        except OutOfBlocks:
+            self._free.extend(fresh)          # atomic: return partial draw
+            raise
+        for bid in fresh:
             self._refcount[bid] = 1
             held.append(bid)
 

@@ -49,12 +49,17 @@ class Cluster:
     def _start_transfer(self, req: Request, src: Instance, dst: Instance,
                         now: float, kind: str):
         """kind: 'place' (prefill->decode), 'degrade', or 'backflow'."""
+        # prefix-aware migration: when the destination already caches a
+        # prefix of the request's prompt, only the non-shared suffix
+        # ships (the landed state aliases the cached blocks)
+        shared = dst.peek_migration_prefix(req)
         state = src.eject(req)
         req.state = State.MIGRATING
         req.n_migrations += 1
-        t = self.cost.transfer_time(req.context_len)
+        moved = max(req.context_len - shared, 0)
+        t = self.cost.transfer_time(moved)
         self.transfer_count += 1
-        self.transfer_bytes += self.cost.state_bytes(req.context_len)
+        self.transfer_bytes += self.cost.state_bytes(moved)
         self._push(now + t, TRANSFER, (req, dst, state, kind))
 
     # ------------------------------------------------------------------

@@ -69,13 +69,37 @@ class Instance:
         self.chunk_size = chunk_size
         self.cost = cost
         self.executor = executor
+        if prefix_cache is None:
+            # a paged executor with prefix caching enabled owns the
+            # PrefixCache (its allocator's ids index the physical pool)
+            prefix_cache = getattr(executor, "prefix_cache_obj", None)
+        else:
+            adopt = getattr(executor, "adopt_prefix_cache", None)
+            if adopt is not None and not adopt(prefix_cache) \
+                    and getattr(executor, "paged", False):
+                # a paged executor that cannot bind the caller's
+                # PrefixCache would run two divergent block-bookkeeping
+                # systems (and a mismatched block size would round
+                # prefill_pos into aliased shared blocks) — refuse
+                raise ValueError(
+                    "prefix_cache.block_size must match the paged "
+                    "executor's cache_block_size")
         self.prefix_cache = prefix_cache
         if prefix_cache is not None:
             # watermark/degradation reads the SHARED allocator: cached
             # (refcount-0) blocks are evictable, so they don't pressure M
             self.allocator = prefix_cache.allocator
+        elif getattr(executor, "allocator", None) is not None:
+            # unified bookkeeping: admission draws from the allocator
+            # whose block ids index the executor's physical pool, so HBM
+            # capacity is bounded by actual context, not n_slots*max_seq
+            self.allocator = executor.allocator
         else:
             self.allocator = BlockAllocator(hbm_blocks, block_size)
+        if self.allocator is getattr(executor, "allocator", None):
+            # this Instance now drives allocate/extend/free; the
+            # executor must stop self-managing the same allocator
+            executor.use_external_bookkeeping()
         self.max_decode_batch = max_decode_batch
 
         self.prefill_queue: deque[Request] = deque()
@@ -113,10 +137,27 @@ class Instance:
         """Longest cached prefix (tokens) this instance could reuse for
         ``req`` — pure, so the proxy can probe every instance when
         routing (cache-aware TTFT_hat)."""
-        if (self.prefix_cache is None or req.prefill_pos != 0
-                or not req.prompt_tokens):
+        if req.prefill_pos != 0:
+            return 0
+        return self._match_prefix(req)
+
+    def _match_prefix(self, req: Request) -> int:
+        if self.prefix_cache is None or not req.prompt_tokens:
             return 0
         return self.prefix_cache.match_tokens(req.prompt_tokens)
+
+    def peek_migration_prefix(self, req: Request) -> int:
+        """Longest cached prefix (tokens) of a MIGRATING request's prompt
+        this instance already holds — a flowing-decode move only ships
+        the non-shared suffix, so its transfer cost is charged on
+        ``context_len - peek_migration_prefix`` (pure, like
+        ``peek_prefix``, but valid mid-decode).  Zero unless this
+        instance's executor actually lands migrations by aliasing cached
+        blocks (paged engine / simulator) — a dense engine ships the
+        full row and must be charged in full."""
+        if not getattr(self.executor, "prefix_aware_transfer", False):
+            return 0
+        return self._match_prefix(req)
 
     def decode_load(self) -> int:
         """HBM usage proxy for proxy-side load balancing (paper §3.3 ①)."""

@@ -66,6 +66,55 @@ class PackedPrefill:
     slots: np.ndarray       # [B] int32 cache row per request (or n_slots)
 
 
+@dataclasses.dataclass
+class PackedMixed:
+    """Host-side arrays for one fused mixed prefill+decode call over the
+    paged cache.  Decode rows are just chunks of length 1 (their token
+    is the last sampled token, their start the row's position); padding
+    rows have ``valid == 0`` and an all ``-1`` table (every KV write is
+    dropped on-device)."""
+    tokens: np.ndarray      # [B, T] int32, zero-padded
+    start: np.ndarray       # [B] int32 absolute start position per row
+    valid: np.ndarray       # [B] int32 valid token count per row (0 = pad)
+    tables: np.ndarray      # [B, NB] int32 block tables (-1 = unallocated)
+
+
+def pack_mixed(chunks, starts: Sequence[int], table_rows,
+               t_buckets: Sequence[int], max_blocks: int,
+               block_size: int) -> PackedMixed:
+    """Pack mixed prefill chunks + decode steps into one bucketed batch.
+
+    ``table_rows[i]`` is row i's full block table (np int32, -1 filled).
+    All three batch axes are bucketed: T to the configured token
+    buckets, B to the next power of two, and the table width NB to the
+    smallest power of two covering every row's read frontier
+    ``ceil((start + len) / block_size)`` (capped at ``max_blocks``) —
+    so decode-heavy iterations over short contexts attend over far
+    fewer kv columns than ``max_seq``.
+    """
+    B = bucket_batch(len(chunks))
+    longest = max(len(c) for c in chunks)
+    # decode-only iterations are the steady-state hot path: keep them at
+    # T == 1 instead of padding to the smallest prefill bucket
+    T = 1 if longest == 1 else bucket(longest, t_buckets)
+    need = max(-(-(st + len(c)) // block_size)
+               for c, st in zip(chunks, starts))
+    NB = min(bucket_batch(max(need, 1)), max_blocks)
+    if NB < need:
+        raise ValueError(f"row needs {need} blocks, table holds {NB}")
+    tokens = np.zeros((B, T), np.int32)
+    start = np.zeros(B, np.int32)
+    valid = np.zeros(B, np.int32)
+    tables = np.full((B, NB), -1, np.int32)
+    for i, (toks, st, row) in enumerate(zip(chunks, starts, table_rows)):
+        take = len(toks)
+        tokens[i, :take] = toks
+        start[i] = st
+        valid[i] = take
+        tables[i] = row[:NB]
+    return PackedMixed(tokens, start, valid, tables)
+
+
 def pack_prefill(chunks, starts: Sequence[int], row_slots: Sequence[int],
                  n_slots: int, t_buckets: Sequence[int]) -> PackedPrefill:
     """Pack per-request prefill chunks (``chunks[i]`` = token list starting

@@ -2,28 +2,33 @@
 batches on an actual model (runnable on CPU with small configs; the same
 code path jit-lowers for the TPU meshes in the dry-run).
 
-Two executor paths share one cache layout:
+Three executor paths:
 
-* **batched** (default): all prefill chunks of an iteration are packed
-  into one padded ``[B, T_bucket]`` jit call with per-row start
-  positions, valid lengths, and cache-slot indices.  Cache rows are
-  gathered/scattered *inside* the jitted step (slot-indexed, donated
-  buffers), and sampling (greedy argmax / temperature categorical) is
-  fused into the step so only token ids cross the host boundary.  Both
-  batch axes are bucketed (see ``repro.engine.batching``) to bound the
-  number of compile variants.  Families with recurrent or windowed
-  per-layer state (mamba2 / zamba2 / gemma3-local / whisper) and
-  capacity-dropping MoE cannot be T-padded without changing results;
-  they fall back to an on-device slot-indexed row path (exact shapes,
-  still jit-fused sampling, no host-side cache gather/scatter).
+* **paged** (default for all-ATTN configs): KV lives in a physical
+  block pool ([L, num_blocks, block_size, Hkv, Dh], flat token axis)
+  addressed through per-slot int32 block tables
+  (``repro.engine.paged``).  Every iteration — prefill chunks AND
+  decode steps together — executes as ONE fused jit call: decode rows
+  are packed as length-1 chunks next to the prefill rows, attention
+  reads KV through the block tables (Pallas paged kernels when
+  ``attention.use_kernels`` is on, jnp gather reference otherwise),
+  sampling is fused, and only token ids cross the host boundary.
+  Prefix reuse and migration become block-table pointer updates, and
+  HBM admission is bounded by blocks actually referenced instead of
+  ``n_slots x max_seq`` reserved rows.
+* **batched dense** (fallback for families that cannot page: recurrent
+  / windowed state, capacity-dropping MoE): packed T-padded prefill
+  where safe, else exact-shape slot-indexed rows; full-slot-batch fused
+  decode over the slot-contiguous dense cache.
 * **row-wise reference** (``batched=False``): the original executor —
   per-request exact-shape prefill with host-side cache row
   gather/scatter and host-side sampling.  Kept as the token-exact
-  oracle the batched path is tested against.
+  oracle the paged and batched paths are tested against.
 
-Decode always runs the full slot batch (inactive rows are harmless —
-masks derive validity from each row's own position, and recurrent state
-is zeroed at slot assignment).
+Decode on the dense paths always runs the full slot batch (inactive
+rows are harmless — masks derive validity from each row's own position,
+and recurrent state is zeroed at slot assignment); the paged path runs
+exactly the scheduled rows.
 """
 from __future__ import annotations
 
@@ -34,9 +39,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache.prefix_cache import PrefixCache
 from repro.cache.prefix_tree import PrefixTree
 from repro.engine import batching, migrate
 from repro.engine.kvcache import SlotTable
+from repro.engine.paged import PagedKVCache
 from repro.engine.request import Request
 from repro.models import transformer as tf
 from repro.models.config import ATTN, ModelConfig
@@ -55,12 +62,18 @@ def packable(cfg: ModelConfig) -> bool:
 class JaxExecutor:
     """Implements the core.instance.Executor protocol with a real model."""
 
+    #: decode-growth headroom (tokens) reserved beyond the known context
+    #: at admission — mirrors Instance._admit_prefill
+    HEADROOM = 64
+
     def __init__(self, cfg: ModelConfig, params, n_slots: int, max_seq: int,
                  eos_id: Optional[int] = None, greedy: bool = True,
                  seed: int = 0, batched: bool = True,
                  t_buckets: Optional[Sequence[int]] = None,
                  temperature: float = 1.0, prefix_cache: bool = False,
-                 cache_block_size: int = 16):
+                 cache_block_size: int = 16,
+                 paged: Optional[bool] = None,
+                 hbm_blocks: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -72,23 +85,54 @@ class JaxExecutor:
         self.packed = batched and packable(cfg)
         self.t_buckets = (batching.default_t_buckets(max_seq)
                           if t_buckets is None else tuple(sorted(t_buckets)))
-        self.cache = tf.init_cache(cfg, n_slots, max_seq)
         self.slots = SlotTable(n_slots)
         self.positions = np.zeros(n_slots, np.int32)
         self.last_token = np.zeros(n_slots, np.int32)
         self._rng = np.random.default_rng(seed)
         self._base_key = jax.random.PRNGKey(seed)
         self._step = 0
-        # prefix-KV reuse: donor index over resident/retained slot rows.
-        # KV at position p depends only on tokens [0, p] iff every layer
-        # is full-cache global attention — same gate as T-padding.
+        # prefix-KV reuse: KV at position p depends only on tokens [0, p]
+        # iff every layer is full-cache global attention — same gate as
+        # T-padding (and as paging).
         self.prefix_cache_enabled = prefix_cache and packable(cfg)
         self.cache_block_size = cache_block_size
         self._donors = PrefixTree(cache_block_size)
         self._claimed: set = set()
         self._preadded: set = set()
+        self._deferred_states: dict = {}
         self.prefix_adoptions = 0
         self.prefix_copies = 0
+        # ---- paged physical cache (default wherever paging is exact) --
+        self.paged = (batched and packable(cfg) if paged is None
+                      else bool(paged) and batched and packable(cfg))
+        self.kv: Optional[PagedKVCache] = None
+        self.prefix_cache_obj: Optional[PrefixCache] = None
+        # True once an Instance drives allocate/extend/free on our
+        # allocator (unified bookkeeping) — the executor then only READS
+        # owned-block lists; False = executor self-manages (standalone /
+        # legacy construction with a separate instance allocator).
+        self._external_bookkeeping = False
+        if self.paged:
+            max_blocks = -(-max_seq // cache_block_size)
+            # default pool: dense-equivalent capacity + per-slot growth
+            # headroom (admission is still per-block by actual context;
+            # benches pass a smaller pool to realize the memory win)
+            nb = (hbm_blocks if hbm_blocks is not None else
+                  n_slots * (max_blocks
+                             + self.HEADROOM // cache_block_size))
+            alloc = None
+            if self.prefix_cache_enabled:
+                self.prefix_cache_obj = PrefixCache(nb, cache_block_size)
+                alloc = self.prefix_cache_obj.allocator
+            self.kv = PagedKVCache(cfg, n_slots, max_seq, nb,
+                                   cache_block_size, allocator=alloc)
+            self.cache = None            # no dense rows: that's the point
+        else:
+            self.cache = tf.init_cache(cfg, n_slots, max_seq)
+        # only the paged path lands a migration by aliasing cached prefix
+        # blocks; the dense path ships and scatters the full row, so its
+        # transfers must be charged in full (cluster._start_transfer)
+        self.prefix_aware_transfer = self.paged
 
         def _sample_on_device(logits, key):
             if self.greedy:
@@ -171,6 +215,68 @@ class JaxExecutor:
 
         self._prefill_slot = _prefill_slot
 
+        # ---- paged path: ONE fused mixed prefill+decode call ----------
+        block_size = cache_block_size
+
+        @functools.partial(jax.jit, donate_argnames=("pool",))
+        def _mixed_fused(params, pool, tokens, start, valid, tables, key):
+            # compile variants keyed on the bucketed (B, T, NB) shape
+            T = tokens.shape[1]
+            positions = jnp.minimum(
+                start[:, None] + jnp.arange(T, dtype=jnp.int32)[None],
+                max_seq - 1)               # padding must not leave range
+            hidden, pool, _ = tf.forward(
+                params, cfg, tokens, positions, pool,
+                compute_logits=False, valid_len=valid,
+                block_tables=(tables, block_size))
+            last = jnp.take_along_axis(
+                hidden, jnp.maximum(valid - 1, 0)[:, None, None], axis=1)[:, 0]
+            logits = jnp.einsum("bd,dv->bv", last, params["lm_head"])
+            return _sample_on_device(logits, key), pool
+
+        self._mixed_fused = _mixed_fused
+
+    # ------------------------------------------------------------------
+    # unified bookkeeping surface (paged mode)
+    # ------------------------------------------------------------------
+    @property
+    def allocator(self):
+        """The block allocator whose ids index the physical pool (None on
+        the dense paths) — an Instance adopts this so admission and the
+        tensors share one source of truth."""
+        return self.kv.allocator if self.paged else None
+
+    def use_external_bookkeeping(self):
+        """An Instance now drives allocate/extend/free on our allocator;
+        the executor only reads owned-block lists from here on."""
+        self._external_bookkeeping = True
+
+    def adopt_prefix_cache(self, pc: PrefixCache) -> bool:
+        """Bind an instance-owned PrefixCache: its allocator's block ids
+        become the pool's physical indices and its radix tree becomes
+        the donor index.  Returns False (no rebind) when incompatible —
+        the executor then keeps self-managed physical bookkeeping."""
+        if not self.paged or pc.block_size != self.cache_block_size:
+            return False
+        self.prefix_cache_obj = pc
+        self.kv.rebind_allocator(pc.allocator)
+        self._external_bookkeeping = True
+        return True
+
+    def sync(self):
+        """Block until all in-flight cache updates land (benchmarks)."""
+        if self.paged:
+            jax.block_until_ready(self.kv.pool["segments"])
+        else:
+            jax.block_until_ready(self.cache["segments"])
+
+    def cache_bytes(self) -> int:
+        """Device bytes held by the KV cache (pool or dense rows)."""
+        if self.paged:
+            return self.kv.pool_bytes()
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.cache["segments"]))
+
     # ------------------------------------------------------------------
     def _acquire_slot(self, rid: int) -> int:
         """Acquire a free slot, preferring rows that are NOT retained
@@ -191,6 +297,8 @@ class JaxExecutor:
         skips its own acquisition.  Returns the claimed token count."""
         if not self.prefix_cache_enabled or not req.prompt_tokens:
             return 0
+        if self.paged:
+            return self._claim_prefix_paged(req, max_tokens)
         bs = self.cache_block_size
         cap = min(max_tokens, len(req.prompt_tokens) - 1,
                   self.max_seq - 1) // bs
@@ -215,18 +323,68 @@ class JaxExecutor:
         self._claimed.add(req.rid)
         return h
 
+    def _claim_prefix_paged(self, req: Request, max_tokens: int) -> int:
+        """Paged prefix hit = copy-on-write block-table aliasing: the new
+        request takes REFERENCES on the matched blocks (no tensor
+        gather, no row adoption special case — live and finished donors
+        are identical because blocks, not slots, hold the KV)."""
+        pc = self.prefix_cache_obj
+        bs = self.cache_block_size
+        cap = (min(max_tokens, len(req.prompt_tokens) - 1, self.max_seq - 1)
+               // bs * bs)
+        hit = min(pc.match_tokens(req.prompt_tokens), cap)
+        if hit <= 0:
+            return 0
+        slot = self._acquire_slot(req.rid)
+        if not self._external_bookkeeping:
+            total = len(req.prompt_tokens) + self.HEADROOM
+            if not pc.acquire(req.rid, req.prompt_tokens, hit, total):
+                self.slots.release(req.rid)
+                return 0
+            self.kv.refresh_row(slot, req.rid)
+        else:
+            # the Instance's PrefixCache.acquire (same allocator) takes
+            # the references; the table row is built at add_request
+            self.kv.clear_row(slot)
+        self.positions[slot] = hit
+        self.last_token[slot] = 0
+        self._claimed.add(req.rid)
+        self.prefix_adoptions += 1
+        return hit
+
     def add_request(self, req: Request):
         if req.rid in self._preadded:
             # state already inserted by a migration (insert_state)
             self._preadded.discard(req.rid)
             return
+        if req.rid in self._deferred_states:
+            # memory-full at inject time: the admission gate has now
+            # cleared this request — land the stashed migrated blocks
+            # (plain allocation; the prefix-aliasing fast path is only
+            # taken when the pool had room at inject)
+            state = self._deferred_states.pop(req.rid)
+            slot = self._acquire_slot(req.rid)
+            if not self._external_bookkeeping:
+                self.kv.ensure(req.rid, state["pos"] + self.HEADROOM)
+            self._land_blocks(req, state, slot)
+            return
         if req.rid in self._claimed:
-            # slot acquired + prefix columns populated by claim_prefix;
-            # zeroing would wipe the inherited KV
+            # slot acquired + prefix KV inherited by claim_prefix;
+            # zeroing / re-tabling would wipe it
             self._claimed.discard(req.rid)
+            if self.paged:
+                # unified bookkeeping: the Instance has taken the block
+                # references by now — materialize the table row
+                self.kv.refresh_row(self.slots.slot(req.rid), req.rid)
             return
         slot = self._acquire_slot(req.rid)
-        self.cache = migrate.zero_row(self.cache, slot)
+        if self.paged:
+            if not self._external_bookkeeping:
+                self.kv.ensure(req.rid,
+                               max(req.prompt_len, 1) + self.HEADROOM)
+            self.kv.refresh_row(slot, req.rid)
+        else:
+            self.cache = migrate.zero_row(self.cache, slot)
         self.positions[slot] = 0
         if req.prompt_tokens is None:
             req.prompt_tokens = list(
@@ -234,6 +392,19 @@ class JaxExecutor:
                                    size=req.prompt_len))
 
     def release(self, req: Request):
+        if self.paged:
+            # retention is block-level: freeing decrefs, and registered
+            # (committed) blocks are RETAINED in the allocator's LRU —
+            # no slot-donor bookkeeping needed
+            self._claimed.discard(req.rid)
+            self._preadded.discard(req.rid)
+            self._deferred_states.pop(req.rid, None)
+            slot = self.slots.release(req.rid)
+            if slot is not None:
+                self.kv.clear_row(slot)
+            if not self._external_bookkeeping:
+                self.kv.allocator.free(req.rid)    # no-op if never held
+            return
         # the freed row keeps its donor registration: its prompt KV
         # stays adoptable until the slot is reacquired
         if req.rid in self._claimed and self.slots.has(req.rid):
@@ -251,9 +422,18 @@ class JaxExecutor:
         self.slots.release(req.rid)
 
     def _register_donor(self, req: Request, slot: int):
-        """Prefill complete: the row now holds valid KV for the whole
-        prompt — publish its full blocks to the donor index."""
+        """Prefill complete (or migrated-in state landed): the row now
+        holds valid KV for the whole prompt — publish its full blocks to
+        the donor index."""
         if not self.prefix_cache_enabled or not req.prompt_tokens:
+            return
+        if self.paged:
+            # blocks ARE the donor currency: publish + retain them in
+            # the shared radix tree (idempotent — the Instance commits
+            # through the same PrefixCache at prefill completion)
+            if (self.prefix_cache_obj is not None
+                    and self.kv.allocator.holds(req.rid)):
+                self.prefix_cache_obj.commit(req.rid, req.prompt_tokens)
             return
         n = len(req.prompt_tokens) // self.cache_block_size
         if n > 0:
@@ -284,9 +464,71 @@ class JaxExecutor:
 
     # ------------------------------------------------------------------
     def execute(self, plan) -> Dict[int, bool]:
+        if self.paged:
+            return self._execute_paged(plan)
         if self.batched:
             return self._execute_batched(plan)
         return self._execute_reference(plan)
+
+    # ---- paged hot path: one fused mixed-batch jit call ---------------
+    def _execute_paged(self, plan) -> Dict[int, bool]:
+        """Execute a whole TaiChi iteration — every prefill chunk AND
+        every decode step — as ONE jit call over the block pool.  Decode
+        rows ride along as length-1 chunks (token = last sampled token,
+        start = row position); per-row valid lengths and block tables
+        make the geometry uniform."""
+        eos: Dict[int, bool] = {}
+        rows = []   # (req, slot, start, chunk, completes, is_decode)
+        if plan.prefill_items:
+            for req, start, take, completes in plan.prefill_rows():
+                rows.append((req, self.slots.slot(req.rid), start,
+                             req.prompt_tokens[start:start + take],
+                             completes, False))
+        for req in plan.decode_reqs:
+            slot = self.slots.slot(req.rid)
+            # clamp like the jit step does: contexts past max_seq keep
+            # rewriting the last position (the dense ring would wrap)
+            rows.append((req, slot,
+                         min(int(self.positions[slot]), self.max_seq - 1),
+                         [int(self.last_token[slot])], False, True))
+        if not rows:
+            return eos
+        table_rows = []
+        for req, slot, start, chunk, _, _ in rows:
+            if not self._external_bookkeeping:
+                self.kv.ensure(req.rid,
+                               min(start + len(chunk), self.max_seq))
+            self.kv.refresh_row_if_grown(slot, req.rid)
+            table_rows.append(self.kv.tables[slot])
+        packed = batching.pack_mixed(
+            [chunk for _, _, _, chunk, _, _ in rows],
+            [start for _, _, start, _, _, _ in rows],
+            table_rows, self.t_buckets, self.kv.max_blocks,
+            self.cache_block_size)
+        toks, self.kv.pool = self._mixed_fused(
+            self.params, self.kv.pool, jnp.asarray(packed.tokens),
+            jnp.asarray(packed.start), jnp.asarray(packed.valid),
+            jnp.asarray(packed.tables), self._next_key())
+        toks = np.asarray(toks)
+        for i, (req, slot, start, chunk, completes, is_dec) in \
+                enumerate(rows):
+            if is_dec:
+                tok = int(toks[i])
+                req.output_tokens.append(tok)
+                self.last_token[slot] = tok
+                self.positions[slot] += 1
+                if self.eos_id is not None and tok == self.eos_id:
+                    eos[req.rid] = True
+                continue
+            self.positions[slot] = start + len(chunk)
+            if completes:
+                tok = int(toks[i])
+                req.output_tokens.append(tok)
+                self.last_token[slot] = tok
+                self._register_donor(req, slot)
+                if self.eos_id is not None and tok == self.eos_id:
+                    eos[req.rid] = True
+        return eos
 
     # ---- batched hot path --------------------------------------------
     def _execute_batched(self, plan) -> Dict[int, bool]:
@@ -397,20 +639,83 @@ class JaxExecutor:
     # ------------------------------------------------------------------
     def extract_state(self, req: Request):
         slot = self.slots.slot(req.rid)
+        if self.paged:
+            # ship only the blocks actually covering the written context
+            # (growth headroom stays home)
+            ctx = int(self.positions[slot])
+            n = self.kv.blocks_for(max(ctx, 1))
+            bids = self.kv.allocator.owned(req.rid)[:n]
+            return {"paged_blocks": self.kv.extract_blocks(bids),
+                    "n_blocks": len(bids), "pos": ctx,
+                    "last_token": int(self.last_token[slot]),
+                    "prompt_tokens": list(req.prompt_tokens or ())}
         row = migrate.extract_row(self.cache, slot)
         return {"row": row, "pos": int(self.positions[slot]),
                 "last_token": int(self.last_token[slot])}
 
     def insert_state(self, req: Request, state):
+        if self.paged:
+            if "paged_blocks" not in state:
+                raise ValueError("dense-row state cannot land in a paged "
+                                 "executor (migrate between like engines)")
+            return self._insert_state_paged(req, state)
         slot = self._acquire_slot(req.rid)
         self.cache = migrate.insert_row(self.cache, state["row"], slot)
         self.positions[slot] = state["pos"]
         self.last_token[slot] = state["last_token"]
         # re-acquired below by add_request semantics: mark as pre-added
         self._preadded.add(req.rid)
+        # donor re-registration after migration-in: the landed row holds
+        # valid KV for the full prompt — make it adoptable here too
+        self._register_donor(req, slot)
+
+    def _insert_state_paged(self, req: Request, state):
+        """Land migrated blocks: alias whatever prefix the destination
+        already caches (those shipped blocks are discarded), scatter
+        only the non-shared suffix, and republish the prompt blocks to
+        this instance's donor index.
+
+        When the pool is memory-full the landing is DEFERRED instead of
+        raising: the state is stashed and materialized by add_request
+        once the instance's admission gate (can_allocate in
+        _try_admit_pending) lets the request through — same graceful
+        queueing as the dense path's allocation-at-admission contract."""
+        prompt = req.prompt_tokens or state.get("prompt_tokens") or []
+        shared_bids: list = []
+        if self.prefix_cache_enabled and self.prefix_cache_obj and prompt:
+            pc = self.prefix_cache_obj
+            hit = min(pc.match_tokens(prompt),
+                      (state["n_blocks"] - 1) * self.cache_block_size)
+            if hit > 0:
+                shared_bids = pc.matched_bids(prompt, hit)
+        alloc = self.kv.allocator
+        total = state["pos"] + self.HEADROOM
+        if not alloc.can_allocate(total, shared_bids):
+            self._deferred_states[req.rid] = state
+            return
+        slot = self._acquire_slot(req.rid)
+        alloc.allocate(req.rid, total, shared=shared_bids)
+        self._land_blocks(req, state, slot, len(shared_bids))
+        self._preadded.add(req.rid)
+
+    def _land_blocks(self, req: Request, state, slot: int,
+                     skip_blocks: int = 0):
+        self.kv.refresh_row(slot, req.rid)
+        self.kv.insert_blocks(
+            self.kv.allocator.owned(req.rid)[:state["n_blocks"]],
+            state["paged_blocks"], skip_blocks=skip_blocks)
+        self.positions[slot] = state["pos"]
+        self.last_token[slot] = state["last_token"]
+        # donor re-registration after migration-in (open ROADMAP item):
+        # republish the full prompt blocks so the migrated context is
+        # adoptable on this instance
+        self._register_donor(req, slot)
 
     def migration_bytes(self, req: Request) -> int:
         slot = self.slots.slot(req.rid)
+        if self.paged:
+            n = self.kv.blocks_for(max(int(self.positions[slot]), 1))
+            return n * self.cache_block_size * self.kv.token_bytes()
         return migrate.row_bytes(migrate.extract_row(self.cache, slot))
 
 
@@ -418,6 +723,10 @@ class SimExecutor:
     """Token oracle for the event-driven simulator: no tensors, no
     compute.  EOS arrives when the request's hidden output length is
     reached (the instance observes it only as done())."""
+
+    #: the simulator models the paper system, where migrations ship only
+    #: the non-shared suffix when the destination caches the prefix
+    prefix_aware_transfer = True
 
     def execute(self, plan) -> Dict[int, bool]:
         return {}

@@ -1,30 +1,33 @@
-"""Jit'd public wrapper around the chunked-prefill attention kernel.
+"""Jit'd public wrappers around the chunked-prefill attention kernels.
 
 Handles layout: model-side tensors are [B, Tq, Hq, D] / [B, S, Hkv, D];
-the kernel wants GQA folded into q rows ([B, Hkv, G*Tq, D], g-major) and
-KV in [B, Hkv, S, D].  Pads q rows to a multiple of the q block and S to
-a multiple of the kv block.
+the kernels want GQA folded into q rows ([B, Hkv, G*Tq, D], g-major) and
+KV in [B, Hkv, S, D] (dense) or [num_blocks, Hkv, bs, D] (paged).  Pads
+q rows to a multiple of the q block and S to a multiple of the kv block.
+Backend is native on TPU, interpret elsewhere (``resolve_interpret``).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.chunked_prefill_attention.chunked_attn import (
     chunked_prefill_attention_kernel)
+from repro.kernels.chunked_prefill_attention.paged_prefill import (
+    paged_prefill_attention_kernel)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
 
 
 @functools.partial(jax.jit,
                    static_argnames=("bq", "bk", "interpret"))
-def chunked_prefill_attention(q, k, v, prefix, *, bq: int = 128,
-                              bk: int = 128, interpret: bool = True):
-    """q: [B, Tq, Hq, D]; k, v: [B, S, Hkv, D]; prefix: int32 scalar
-    (absolute start position of the chunk; cache slots < prefix+Tq valid).
-
-    Returns [B, Tq, Hq, D].
-    """
+def _chunked_prefill(q, k, v, prefix, *, bq: int, bk: int, interpret: bool):
     B, Tq, Hq, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
@@ -53,5 +56,55 @@ def chunked_prefill_attention(q, k, v, prefix, *, bq: int = 128,
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, D)
 
 
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
+def chunked_prefill_attention(q, k, v, prefix, *, bq: int = 128,
+                              bk: int = 128,
+                              interpret: Optional[bool] = None):
+    """q: [B, Tq, Hq, D]; k, v: [B, S, Hkv, D]; prefix: int32 scalar
+    (absolute start position of the chunk; cache slots < prefix+Tq valid).
+
+    Returns [B, Tq, Hq, D].
+    """
+    return _chunked_prefill(q, k, v, prefix, bq=bq, bk=bk,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "bq", "interpret"))
+def _paged_prefill(q, k_pool, v_pool, tables, start, valid, *,
+                   block_size: int, bq: int, interpret: bool):
+    B, Tq, Hq, D = q.shape
+    Hkv = k_pool.shape[1]
+    n_blk = k_pool.shape[0] // block_size
+    G = Hq // Hkv
+    qr = q.reshape(B, Tq, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    qr = qr.reshape(B, Hkv, G * Tq, D)
+    R = G * Tq
+    bq = min(bq, _round_up(R, 8))
+    pad_r = _round_up(R, bq) - R
+    if pad_r:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, pad_r), (0, 0)))
+    kp = k_pool.reshape(n_blk, block_size, Hkv, D).transpose(0, 2, 1, 3)
+    vp = v_pool.reshape(n_blk, block_size, Hkv, D).transpose(0, 2, 1, 3)
+    tbl = jnp.clip(tables, 0, n_blk - 1).astype(jnp.int32)
+    out = paged_prefill_attention_kernel(
+        qr, kp, vp, tbl, start.astype(jnp.int32), valid.astype(jnp.int32),
+        tq=Tq, bq=bq, interpret=interpret)
+    out = out[:, :, :R].reshape(B, Hkv, G, Tq, D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, D)
+
+
+def paged_chunked_prefill_attention(q, k_pool, v_pool, tables, start, valid,
+                                    *, block_size: int, bq: int = 128,
+                                    interpret: Optional[bool] = None):
+    """Paged chunked-prefill attention with PER-ROW chunk geometry.
+
+    q: [B, Tq, Hq, D] (rows padded to a common Tq bucket);
+    k_pool/v_pool: [P, Hkv, D] with P = num_blocks * block_size;
+    tables: int32 [B, NB]; start/valid: int32 [B] per-row absolute chunk
+    offset and valid token count (valid == 1 rows are decode steps —
+    one call executes a whole mixed prefill+decode batch).
+    Returns [B, Tq, Hq, D]; rows/tokens beyond ``valid`` are garbage and
+    must be discarded by the caller."""
+    return _paged_prefill(q, k_pool, v_pool, tables, start, valid,
+                          block_size=block_size, bq=bq,
+                          interpret=resolve_interpret(interpret))

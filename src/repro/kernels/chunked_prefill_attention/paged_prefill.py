@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: chunked-prefill flash attention over a PAGED KV
+cache with PER-ROW chunk geometry.
+
+Extends ``chunked_attn.py`` in two directions the fused mixed-batch
+executor needs:
+
+  * KV lives in a physical block pool addressed through scalar-prefetch
+    block tables (one table row per sequence), so sequences of wildly
+    different lengths share one pool with no per-slot reservation;
+  * each batch row carries its own ``start`` (absolute chunk offset)
+    and ``valid`` (tokens actually present in the padded chunk), so a
+    single call executes a TaiChi mixed batch: prefill chunks of
+    different lengths AND decode rows (valid == 1) together.
+
+Grid = (batch, kv head, q block, logical kv block); the kv-block axis is
+innermost with running-softmax scratch, and blocks at or beyond a row's
+write frontier (start + valid) are skipped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, start_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, bq: int, bs: int, tq: int,
+            n_blk: int, scale: float):
+    b = pl.program_id(0)
+    qb = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = start_ref[b]
+    end = start + valid_ref[b]                    # write frontier (excl.)
+    rows = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)[:, 0]
+    t = jax.lax.rem(rows, tq)                     # rows are g-major
+    qpos = start + t                              # [BQ]
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+
+    # a kv block contributes iff it holds any key before the frontier
+    @pl.when(j * bs < end)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)       # [BQ, D]
+        k = k_ref[0, 0].astype(jnp.float32)       # [bs, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [BQ, bs]
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < end)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                       # [BQ, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_blk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_kernel(q, k_pool, v_pool, tables, start, valid,
+                                   *, tq: int, bq: int = 128,
+                                   interpret: bool = True):
+    """q: [B, Hkv, R, D] with R = G*Tq (g-major rows);
+    k_pool/v_pool: [num_blocks, Hkv, bs, D]; tables: int32 [B, NB]
+    (clamped into range); start/valid: int32 [B] per-row chunk offset
+    and valid token count.  Returns [B, Hkv, R, D]."""
+    B, Hkv, R, D = q.shape
+    bs = k_pool.shape[2]
+    NB = tables.shape[1]
+    bq = min(bq, R)
+    assert R % bq == 0, (R, bq)
+    n_qb = R // bq
+    kern = functools.partial(_kernel, bq=bq, bs=bs, tq=tq, n_blk=NB,
+                             scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, n_qb, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda b, h, qb, j, tbl, st, vl: (b, h, qb, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, qb, j, tbl, st, vl:
+                         (tbl[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, qb, j, tbl, st, vl:
+                         (tbl[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, qb, j, tbl, st, vl:
+                               (b, h, qb, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q.dtype),
+        interpret=interpret,
+    )(tables, start, valid, q, k_pool, v_pool)

@@ -1,12 +1,18 @@
-"""Jit'd public wrapper for the decode-attention kernel: layout + padding."""
+"""Jit'd public wrappers for the decode-attention kernels: layout +
+padding + backend selection (native on TPU, interpret elsewhere — see
+``repro.kernels.resolve_interpret``)."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.decode_attention.decode_attn import decode_attention_kernel
+from repro.kernels.decode_attention.paged_decode import (
+    paged_decode_attention_kernel)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -14,12 +20,7 @@ def _round_up(x: int, m: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
-def decode_attention(q, k, v, lengths, *, bk: int = 512,
-                     interpret: bool = True):
-    """q: [B, Hq, D]; k, v: [B, S, Hkv, D]; lengths: [B] int32.
-
-    Returns [B, Hq, D].
-    """
+def _decode_attention(q, k, v, lengths, *, bk: int, interpret: bool):
     B, Hq, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
@@ -38,3 +39,50 @@ def decode_attention(q, k, v, lengths, *, bk: int = 512,
                                   lengths.astype(jnp.int32).reshape(B, 1),
                                   bk=bk, interpret=interpret)
     return out[:, :, :G].reshape(B, Hq, D)
+
+
+def decode_attention(q, k, v, lengths, *, bk: int = 512,
+                     interpret: Optional[bool] = None):
+    """q: [B, Hq, D]; k, v: [B, S, Hkv, D]; lengths: [B] int32.
+
+    Returns [B, Hq, D].
+    """
+    return _decode_attention(q, k, v, lengths, bk=bk,
+                             interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def _paged_decode(q, k_pool, v_pool, tables, lengths, *, block_size: int,
+                  interpret: bool):
+    B, Hq, D = q.shape
+    Hkv = k_pool.shape[1]
+    n_blk = k_pool.shape[0] // block_size
+    G = Hq // Hkv
+    Gp = _round_up(G, 8)
+    qg = q.reshape(B, Hkv, G, D)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    # pool [P, Hkv, D] -> [n_blk, Hkv, bs, D] for per-block DMA
+    kp = k_pool.reshape(n_blk, block_size, Hkv, D).transpose(0, 2, 1, 3)
+    vp = v_pool.reshape(n_blk, block_size, Hkv, D).transpose(0, 2, 1, 3)
+    # unused table entries (-1) are clamped: the kernel masks them via
+    # ``lengths`` before any FLOP, so the DMA target is irrelevant
+    tbl = jnp.clip(tables, 0, n_blk - 1).astype(jnp.int32)
+    out = paged_decode_attention_kernel(
+        qg, kp, vp, tbl, lengths.astype(jnp.int32), interpret=interpret)
+    return out[:, :, :G].reshape(B, Hq, D)
+
+
+def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,
+                           block_size: int,
+                           interpret: Optional[bool] = None):
+    """Paged flash-decode: q [B, Hq, D] attends over KV held in a
+    physical block pool through per-sequence block tables.
+
+    k_pool/v_pool: [P, Hkv, D] with P = num_blocks * block_size (flat
+    token axis, block-major); tables: int32 [B, NB] (entries < 0 are
+    unallocated); lengths: int32 [B] context lengths.
+    Returns [B, Hq, D]."""
+    return _paged_decode(q, k_pool, v_pool, tables, lengths,
+                         block_size=block_size,
+                         interpret=resolve_interpret(interpret))

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: GQA decode attention over a PAGED KV cache.
+
+Extends ``decode_attn.py`` to a vLLM-style physical block pool: instead
+of one contiguous [S, D] cache row per sequence, KV lives in a shared
+pool of fixed-size token blocks and each sequence carries an int32 block
+table mapping logical block index -> physical block id.
+
+TPU adaptation: the block table is a *scalar-prefetch* input
+(``PrefetchScalarGridSpec``), so the BlockSpec index map dereferences it
+to pick which physical kv block to DMA for grid step (b, h, j) — the
+pointer chase happens at DMA-issue time, not inside the kernel body.
+The innermost grid axis walks the sequence's logical blocks with
+running-softmax state in VMEM scratch, exactly like the dense
+flash-decode kernel; blocks at or beyond the sequence length are
+skipped (their DMA lands on a clamped block id but no FLOPs are spent).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, bs: int, n_blk: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+
+    @pl.when(j * bs < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [G', D]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bs, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [G', bs]
+        mask = (kpos < length)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_blk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pool, v_pool, tables, lengths, *,
+                                  interpret: bool = True):
+    """q: [B, Hkv, G', D] (G' = padded group size);
+    k_pool/v_pool: [num_blocks, Hkv, bs, D] physical block pools;
+    tables: int32 [B, NB] block tables (entries clamped into range —
+    out-of-context entries are masked by ``lengths``);
+    lengths: int32 [B] per-sequence context lengths.
+
+    Returns [B, Hkv, G', D]."""
+    B, Hkv, Gp, D = q.shape
+    bs = k_pool.shape[2]
+    NB = tables.shape[1]
+    kern = functools.partial(_kernel, bs=bs, n_blk=NB, scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, D), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, j, tbl, ln: (tbl[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, j, tbl, ln: (tbl[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Gp, D),
+                               lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, D), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gp, D), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, q, k_pool, v_pool)

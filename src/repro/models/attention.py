@@ -123,6 +123,50 @@ def ring_slot_positions(write_end, capacity: int):
     return jnp.where((a >= 0) & (write_end[:, None] > 0), a, -1)
 
 
+def paged_write(cache_k, cache_v, k_new, v_new, positions, tables,
+                block_size: int, valid_len=None):
+    """Scatter [B,T] new KV into a physical block pool.
+
+    cache_k/cache_v: [P, Hkv, D] flat-token pools (P = num_blocks * bs,
+    block-major).  positions: [B,T] absolute positions; tables: [B,NB]
+    int32 block tables (entry < 0 = unallocated).  The destination slot
+    for (b, t) is ``tables[b, pos // bs] * bs + pos % bs``; invalid
+    tokens (padding beyond ``valid_len``, unallocated blocks) are routed
+    to the out-of-range slot P and dropped on-device.
+    """
+    B, T = k_new.shape[:2]
+    P = cache_k.shape[0]
+    NB = tables.shape[1]
+    bi = positions // block_size
+    blk = jnp.take_along_axis(tables, jnp.clip(bi, 0, NB - 1), axis=1)
+    ok = (blk >= 0) & (bi < NB)
+    if valid_len is not None:
+        ok &= jnp.arange(T)[None, :] < valid_len[:, None]
+    dest = jnp.where(ok, blk * block_size + positions % block_size, P)
+    flat = dest.reshape(-1)
+    cache_k = cache_k.at[flat].set(
+        k_new.reshape((B * T,) + k_new.shape[2:]), mode="drop")
+    cache_v = cache_v.at[flat].set(
+        v_new.reshape((B * T,) + v_new.shape[2:]), mode="drop")
+    return cache_k, cache_v
+
+
+def paged_gather(pool, tables, block_size: int):
+    """Gather a per-row dense KV view [B, NB*bs, Hkv, D] from the block
+    pool, plus logical kv positions [B, NB*bs] (-1 for unallocated
+    blocks).  This is the jnp reference read path — the Pallas kernels
+    dereference the table inside the kernel instead of materializing the
+    view."""
+    B, NB = tables.shape
+    idx = (jnp.maximum(tables, 0)[:, :, None] * block_size
+           + jnp.arange(block_size, dtype=jnp.int32)[None, None, :])
+    dense = pool[idx.reshape(B, NB * block_size)]
+    kv_pos = jnp.where(
+        jnp.repeat(tables >= 0, block_size, axis=1),
+        jnp.arange(NB * block_size, dtype=jnp.int32)[None, :], -1)
+    return dense, kv_pos
+
+
 def write_cache(cache_k, cache_v, k_new, v_new, start, valid_len=None):
     """Write [B,T] new KV at absolute positions start..start+T (per row).
 
@@ -150,7 +194,7 @@ def write_cache(cache_k, cache_v, k_new, v_new, start, valid_len=None):
 
 
 def self_attention(p, cfg, x, positions, cache=None, *, window: int = 0,
-                   rope: bool = True, valid_len=None):
+                   rope: bool = True, valid_len=None, block_tables=None):
     """positions: [B,T] absolute positions of x's tokens.
 
     cache=None  -> pure in-chunk causal attention (training / encoder-free).
@@ -160,16 +204,26 @@ def self_attention(p, cfg, x, positions, cache=None, *, window: int = 0,
                    batched prefill (full-cache layers only): padding KV
                    writes are dropped, padded queries are masked off by
                    causality (their outputs are discarded by the caller).
+    block_tables -> optional ``(tables [B,NB] int32, block_size)``: the
+                   cache is a PAGED pool ({k,v}: [P, Hkv, D] flat-token
+                   block pools) and each row's KV is addressed through
+                   its block table.  Full (non-windowed) attention only.
     Returns (out [B,T,d], new_cache).
     """
     B, T, _ = x.shape
     if valid_len is not None and (cache is None or window):
         raise NotImplementedError(
             "valid_len packing requires a full (non-windowed) KV cache")
+    if block_tables is not None and (cache is None or window):
+        raise NotImplementedError(
+            "paged KV requires a full (non-windowed) cache")
     q, k, v = _project_qkv(p, cfg, x)
     if rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+    if block_tables is not None:
+        return _paged_attention(p, cfg, x, q, k, v, positions, cache,
+                                block_tables, valid_len)
     if cache is None:
         mask = causal_mask(positions, positions, window)
         probs = _masked_softmax(_gqa_scores(q, k), mask)
@@ -213,6 +267,43 @@ def self_attention(p, cfg, x, positions, cache=None, *, window: int = 0,
     mask = causal_mask(positions, kv_pos, window)
     probs = _masked_softmax(_gqa_scores(q, ck), mask)
     out = _gqa_out(probs.astype(x.dtype), cv, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+def _paged_attention(p, cfg, x, q, k, v, positions, cache, block_tables,
+                     valid_len):
+    """Write the chunk into the block pool, attend over the row's
+    table-resident KV.  The same call handles chunked prefill (T > 1)
+    and decode (valid == 1 rows of a mixed batch, or T == 1): masks
+    derive from absolute positions, exactly as the dense path."""
+    B, T, _ = x.shape
+    tables, bs = block_tables
+    ck, cv = paged_write(cache["k"], cache["v"], k, v, positions, tables,
+                         bs, valid_len)
+    if _USE_KERNELS:
+        if T == 1:
+            from repro.kernels.decode_attention.ops import (
+                paged_decode_attention)
+            o = paged_decode_attention(
+                q[:, 0], ck, cv, tables,
+                (positions[:, -1] + 1).astype(jnp.int32), block_size=bs)
+            o = o[:, None]
+        else:
+            from repro.kernels.chunked_prefill_attention.ops import (
+                paged_chunked_prefill_attention)
+            valid = (valid_len if valid_len is not None
+                     else jnp.full((B,), T, jnp.int32))
+            o = paged_chunked_prefill_attention(
+                q, ck, cv, tables, positions[:, 0].astype(jnp.int32),
+                valid.astype(jnp.int32), block_size=bs)
+        out = jnp.einsum("bte,ed->btd",
+                         o.reshape(B, T, -1).astype(x.dtype), p["wo"])
+        return out, {"k": ck, "v": cv}
+    kd, kv_pos = paged_gather(ck, tables, bs)
+    vd, _ = paged_gather(cv, tables, bs)
+    mask = causal_mask(positions, kv_pos)
+    probs = _masked_softmax(_gqa_scores(q, kd), mask)
+    out = _gqa_out(probs.astype(x.dtype), vd, p["wo"])
     return out, {"k": ck, "v": cv}
 
 

@@ -155,12 +155,41 @@ def abstract_cache(cfg, batch, max_seq, dtype=None, cross_len: int = 0):
         lambda: init_cache(cfg, batch, max_seq, dtype, cross_len))
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=None):
+    """Physical block-pool KV cache: every attention layer's KV lives in
+    one shared pool of ``num_blocks`` fixed-size token blocks instead of
+    per-slot [B, max_seq] rows.  Leaves are [n_periods, P, Hkv, Dh] with
+    P = num_blocks * block_size (flat token axis, block-major); rows
+    address it through int32 block tables passed to ``forward``.
+
+    Only full-cache global attention pages cleanly (ring-buffer windows
+    and recurrent state have no per-token block identity), so every
+    block type must be ATTN — the same gate as T-padded packing.
+    """
+    dtype = dtype or cfg.param_dtype
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    P = num_blocks * block_size
+    segs = []
+    for seg in cfg.segments():
+        pos_caches = []
+        for btype in seg.pattern:
+            if btype != ATTN:
+                raise ValueError(
+                    f"paged KV cache requires all-ATTN segments, got {btype}")
+            kv = {"k": jnp.zeros((seg.n_periods, P, hkv, dh), dtype),
+                  "v": jnp.zeros((seg.n_periods, P, hkv, dh), dtype)}
+            pos_caches.append(kv)
+        segs.append(tuple(pos_caches))
+    return {"segments": tuple(segs)}
+
+
 # ---------------------------------------------------------------------------
 # Blocks
 # ---------------------------------------------------------------------------
 
 def _apply_block(btype, bp, cfg, x, positions, cache, shared_attn, enc_out,
-                 valid_len=None):
+                 valid_len=None, block_tables=None):
     """Returns (x, new_cache, aux_loss)."""
     from repro.distributed import hints
     x = hints.constrain_tokens(x)
@@ -180,7 +209,8 @@ def _apply_block(btype, bp, cfg, x, positions, cache, shared_attn, enc_out,
         else:
             a, nc = attn_lib.self_attention(bp["attn"], cfg, h, positions,
                                             cache, window=window,
-                                            valid_len=valid_len)
+                                            valid_len=valid_len,
+                                            block_tables=block_tables)
         x = x + a
         h = rms_norm(x, bp["ln2"], cfg.norm_eps)
         x = x + mlp(bp["mlp"], h)
@@ -242,7 +272,8 @@ def _apply_block(btype, bp, cfg, x, positions, cache, shared_attn, enc_out,
 
 
 def _run_segment(seg: Segment, seg_params, cfg, x, positions, seg_cache,
-                 shared_attn, enc_out, use_remat: bool, valid_len=None):
+                 shared_attn, enc_out, use_remat: bool, valid_len=None,
+                 block_tables=None):
     """Scan over the segment's periods."""
 
     cache_present = tuple(
@@ -268,7 +299,8 @@ def _run_segment(seg: Segment, seg_params, cfg, x, positions, seg_cache,
                 c = None
             x, nc, block_aux = _apply_block(btype, p_params[i], cfg, x,
                                             positions, c, shared_attn,
-                                            enc_out, valid_len)
+                                            enc_out, valid_len,
+                                            block_tables)
             aux = aux + block_aux
             if cache_present[i]:
                 new_stack.append(jax.tree.map(
@@ -304,7 +336,7 @@ def _run_segment(seg: Segment, seg_params, cfg, x, positions, seg_cache,
 
 def forward(params, cfg: ModelConfig, tokens, positions=None, cache=None, *,
             image_embeds=None, audio_embeds=None, compute_logits=True,
-            valid_len=None):
+            valid_len=None, block_tables=None):
     """tokens: [B, T] int32.  positions: [B, T] absolute positions (defaults
     to arange).  cache: from init_cache, or None for train/full-context.
 
@@ -313,6 +345,9 @@ def forward(params, cfg: ModelConfig, tokens, positions=None, cache=None, *,
     valid_len: [B] int32 per-row valid token counts for T-padded batched
     prefill (full-cache attention families only); padding KV writes are
     dropped so the cache stays exactly sequential.
+    block_tables: optional ``(tables [B, NB] int32, block_size)`` — the
+    cache is a paged block pool from ``init_paged_cache`` and every row
+    addresses its KV through its block table (all-ATTN configs only).
 
     Returns (logits [B, T', V] or hidden, new_cache, aux_loss).
     """
@@ -353,7 +388,7 @@ def forward(params, cfg: ModelConfig, tokens, positions=None, cache=None, *,
             continue
         x, ncache, aux = _run_segment(seg, seg_params, cfg, x, positions,
                                       seg_cache, shared_attn, enc_out,
-                                      use_remat, valid_len)
+                                      use_remat, valid_len, block_tables)
         aux_total = aux_total + aux
         new_seg_caches.append(ncache)
 

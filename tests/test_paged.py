@@ -1,0 +1,640 @@
+"""Paged KV execution tests.
+
+Fast tier: mixed-batch packing, block-table/allocator invariants under
+random interleaved ops (hypothesis when available, seeded fallback
+otherwise), kernel backend autodetect, and paged Pallas kernels vs. the
+jnp gather reference on tiny shapes.
+
+Slow tier: token-exact greedy parity of the paged executor (one fused
+mixed prefill+decode jit call per iteration) against the row-wise dense
+oracle — including prefix adoption via block-table aliasing and a
+migration round trip that ships only owned blocks — plus donor
+re-registration after migration-in and prefix-aware transfer charging.
+"""
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.engine import batching
+
+# ---------------------------------------------------------------------------
+# fast tier: packing
+# ---------------------------------------------------------------------------
+
+
+def _table(bids, width=16):
+    row = np.full(width, -1, np.int32)
+    row[:len(bids)] = bids
+    return row
+
+
+def test_pack_mixed_buckets_all_three_axes():
+    packed = batching.pack_mixed(
+        chunks=[[5, 6, 7], [9]], starts=[4, 60],
+        table_rows=[_table([2, 0]), _table([7, 1, 3, 11])],
+        t_buckets=(4, 8), max_blocks=16, block_size=16)
+    assert packed.tokens.shape == (2, 4)          # B=2, T bucket 4
+    # row 1 is a decode-style row: start 60 + 1 token -> needs 4 blocks,
+    # NB buckets to the next power of two
+    assert packed.tables.shape[1] == 4
+    np.testing.assert_array_equal(packed.valid, [3, 1])
+    np.testing.assert_array_equal(packed.start, [4, 60])
+    np.testing.assert_array_equal(packed.tables[0], [2, 0, -1, -1])
+    np.testing.assert_array_equal(packed.tables[1], [7, 1, 3, 11])
+
+
+def test_pack_mixed_pad_rows_are_inert():
+    packed = batching.pack_mixed(
+        chunks=[[1], [2], [3]], starts=[0, 0, 0],
+        table_rows=[_table([0]), _table([1]), _table([2])],
+        t_buckets=(4,), max_blocks=8, block_size=16)
+    assert packed.tokens.shape[0] == 4            # B pow2 padded
+    assert packed.valid[3] == 0
+    assert (packed.tables[3] == -1).all()         # every write drops
+
+
+def test_pack_mixed_nb_capped_at_max_blocks():
+    packed = batching.pack_mixed(
+        chunks=[[1] * 8], starts=[72],             # needs 5 blocks
+        table_rows=[_table([0, 1, 2, 3, 4], width=6)],
+        t_buckets=(8,), max_blocks=6, block_size=16)
+    assert packed.tables.shape[1] == 6            # pow2(5)=8 capped at 6
+
+
+# ---------------------------------------------------------------------------
+# fast tier: kernel backend autodetect
+# ---------------------------------------------------------------------------
+
+jax = pytest.importorskip("jax")
+
+from repro.kernels import resolve_interpret                   # noqa: E402
+
+
+def test_resolve_interpret_autodetect_and_override(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNELS_INTERPRET", raising=False)
+    on_tpu = jax.default_backend() == "tpu"
+    assert resolve_interpret(None) == (not on_tpu)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
+    assert resolve_interpret(None) is True
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "0")
+    assert resolve_interpret(None) is False
+    # explicit argument still wins over the env
+    assert resolve_interpret(True) is True
+
+
+# ---------------------------------------------------------------------------
+# fast tier: block-table / allocator invariants (PagedKVCache)
+# ---------------------------------------------------------------------------
+
+from repro.configs import reduced_config                      # noqa: E402
+from repro.engine.kvcache import OutOfBlocks                  # noqa: E402
+from repro.engine.paged import PagedKVCache                   # noqa: E402
+
+
+def _mini_kv(num_blocks=24, n_slots=6, block_size=4):
+    cfg = reduced_config("smollm-135m")
+    return PagedKVCache(cfg, n_slots, max_seq=64, num_blocks=num_blocks,
+                        block_size=block_size)
+
+
+def run_kv_ops(ops, num_blocks, n_slots, block_size):
+    """Random interleaving of the executor's physical-bookkeeping ops;
+    PagedKVCache.check_invariants asserts no double-owned block, table
+    rows == owned bids, and free + cached + used == total after every
+    op."""
+    kv = _mini_kv(num_blocks, n_slots, block_size)
+    live = {}                                     # rid -> slot
+    free_slots = list(range(n_slots))
+    for op, rid, tokens in ops:
+        if op == "add" and rid not in live and free_slots:
+            try:
+                kv.ensure(rid, tokens)
+            except OutOfBlocks:
+                continue
+            slot = free_slots.pop()
+            live[rid] = slot
+            kv.refresh_row(slot, rid)
+        elif op == "grow" and rid in live:
+            try:
+                kv.ensure(rid, tokens)
+            except OutOfBlocks:
+                continue
+            kv.refresh_row(live[rid], rid)
+        elif op == "share" and rid not in live and live and free_slots:
+            donor = sorted(live)[rid % len(live)]
+            shared = kv.allocator.owned(donor)[
+                :kv.blocks_for(tokens) - 1]
+            for b in shared:
+                kv.allocator.register(b)
+            try:
+                kv.allocator.allocate(rid, tokens, shared=shared)
+            except OutOfBlocks:
+                continue
+            slot = free_slots.pop()
+            live[rid] = slot
+            kv.refresh_row(slot, rid)
+            # CoW aliasing: both tables reference the shared prefix
+            assert kv.row_bids(slot)[:len(shared)] == \
+                kv.row_bids(live[donor])[:len(shared)]
+        elif op == "free" and rid in live:
+            slot = live.pop(rid)
+            kv.clear_row(slot)
+            free_slots.append(slot)
+            kv.allocator.free(rid)
+        kv.check_invariants()
+        for r, s in live.items():
+            owned = kv.allocator.owned(r)[:kv.max_blocks]
+            assert kv.row_bids(s) == owned
+    for rid in list(live):
+        kv.clear_row(live[rid])
+        kv.allocator.free(rid)
+    a = kv.allocator
+    assert a.used_blocks == 0
+    assert a.free_blocks + a.cached_blocks == a.num_blocks
+
+
+KV_OPS = ("add", "grow", "share", "free")
+
+
+def _random_kv_ops(rng, n):
+    return [(rng.choice(KV_OPS), rng.randrange(10), rng.randrange(1, 80))
+            for _ in range(n)]
+
+
+def test_block_table_invariants_seeded():
+    for seed in range(20):
+        rng = random.Random(seed)
+        run_kv_ops(_random_kv_ops(rng, 80),
+                   num_blocks=rng.randrange(8, 48), n_slots=6,
+                   block_size=rng.randrange(1, 8))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(KV_OPS),
+                              st.integers(0, 9), st.integers(1, 80)),
+                    max_size=60),
+           st.integers(8, 48), st.integers(1, 8))
+    def test_block_table_invariants_hypothesis(ops, num_blocks, block_size):
+        run_kv_ops(ops, num_blocks, n_slots=6, block_size=block_size)
+except ImportError:                               # pragma: no cover
+    pass
+
+
+def test_rebind_allocator_requires_matching_block_size():
+    from repro.cache.shared_allocator import SharedBlockAllocator
+    kv = _mini_kv(block_size=4)
+    with pytest.raises(ValueError):
+        kv.rebind_allocator(SharedBlockAllocator(16, block_size=8))
+    bigger = SharedBlockAllocator(40, block_size=4)
+    kv.rebind_allocator(bigger)
+    assert kv.allocator is bigger
+    assert kv.num_blocks == 40
+    # pool leaves rebuilt to the adopted allocator's capacity
+    P = 40 * 4
+    assert all(a.shape[1] == P
+               for a in jax.tree.leaves(kv.pool["segments"]))
+
+
+# ---------------------------------------------------------------------------
+# fast tier: paged kernels vs jnp reference (tiny shapes, interpret)
+# ---------------------------------------------------------------------------
+
+import jax.numpy as jnp                                       # noqa: E402
+
+from repro.kernels.chunked_prefill_attention.ops import (     # noqa: E402
+    paged_chunked_prefill_attention)
+from repro.kernels.decode_attention.ops import (              # noqa: E402
+    paged_decode_attention)
+from repro.models.attention import paged_gather               # noqa: E402
+
+
+def _ref_paged_attention(q, k_pool, v_pool, tables, q_pos, bs):
+    """jnp reference: dense gather through the block table + masked
+    softmax (the engine's non-kernel read path)."""
+    from repro.models.attention import (_gqa_scores, _masked_softmax,
+                                        causal_mask)
+    kd, kv_pos = paged_gather(k_pool, tables, bs)
+    vd, _ = paged_gather(v_pool, tables, bs)
+    mask = causal_mask(q_pos, kv_pos)
+    probs = _masked_softmax(_gqa_scores(q, kd), mask)
+    B, Hkv, G, T, S = probs.shape
+    out = jnp.einsum("bkgts,bskd->btkgd", probs.astype(q.dtype), vd)
+    return out.reshape(B, T, Hkv * G, -1)
+
+
+@pytest.fixture(scope="module")
+def pools():
+    rng = np.random.default_rng(0)
+    bs, nblk, hkv, d = 16, 24, 2, 64
+    kp = jnp.asarray(rng.normal(size=(nblk * bs, hkv, d)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(nblk * bs, hkv, d)).astype(np.float32))
+    return bs, nblk, hkv, d, kp, vp
+
+
+def _rand_tables(rng, nblk, lengths, bs, width):
+    tables = np.full((len(lengths), width), -1, np.int32)
+    pool = list(range(nblk))
+    rng.shuffle(pool)
+    for b, ln in enumerate(lengths):
+        nb = -(-int(ln) // bs)
+        tables[b, :nb] = [pool.pop() for _ in range(nb)]
+    return tables
+
+
+def test_paged_decode_kernel_matches_reference(pools):
+    bs, nblk, hkv, d, kp, vp = pools
+    rng = np.random.default_rng(1)
+    lengths = np.array([37, 5, 160], np.int32)
+    tables = _rand_tables(rng, nblk, lengths, bs, width=11)
+    q = jnp.asarray(rng.normal(size=(3, 8, d)).astype(np.float32))
+    out = paged_decode_attention(q, kp, vp, jnp.asarray(tables),
+                                 jnp.asarray(lengths), block_size=bs,
+                                 interpret=True)
+    ref = _ref_paged_attention(q[:, None], kp, vp, jnp.asarray(tables),
+                               jnp.asarray(lengths - 1)[:, None], bs)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_paged_prefill_kernel_matches_reference_mixed_rows(pools):
+    bs, nblk, hkv, d, kp, vp = pools
+    rng = np.random.default_rng(2)
+    # mixed geometry: real chunk, short chunk, decode-style valid == 1
+    starts = np.array([10, 0, 36], np.int32)
+    valids = np.array([8, 5, 1], np.int32)
+    tables = _rand_tables(rng, nblk, starts + valids, bs, width=9)
+    Tq = 8
+    q = jnp.asarray(rng.normal(size=(3, Tq, 8, d)).astype(np.float32))
+    out = paged_chunked_prefill_attention(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(starts),
+        jnp.asarray(valids), block_size=bs, interpret=True)
+    q_pos = starts[:, None] + np.arange(Tq)[None]
+    ref = _ref_paged_attention(q, kp, vp, jnp.asarray(tables),
+                               jnp.asarray(q_pos), bs)
+    for b in range(3):
+        for t in range(int(valids[b])):           # padded tokens: garbage
+            np.testing.assert_allclose(np.asarray(out[b, t]),
+                                       np.asarray(ref[b, t]), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fast tier: prefix-aware migration charging (pure unit, stub instances)
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_transfer_charges_nonshared_suffix():
+    import itertools
+
+    from repro.core.cluster import Cluster
+    from repro.engine.request import Request
+
+    class StubCost:
+        def transfer_time(self, ctx):
+            return float(ctx)
+
+        def state_bytes(self, ctx):
+            return ctx * 10
+
+    class StubInst:
+        def __init__(self, cached):
+            self.cached = cached
+
+        def eject(self, req):
+            return {}
+
+        def peek_migration_prefix(self, req):
+            return self.cached
+
+    c = Cluster.__new__(Cluster)
+    c.cost = StubCost()
+    c._heap = []
+    c._seq = itertools.count()
+    c.transfer_count = 0
+    c.transfer_bytes = 0
+    req = Request(prompt_len=100, max_new_tokens=16,
+                  prompt_tokens=list(range(100)))
+    req.prefill_pos, req.output_len = 100, 20     # context 120
+    c._start_transfer(req, StubInst(0), StubInst(48), now=0.0, kind="place")
+    assert c.transfer_bytes == (120 - 48) * 10    # suffix only
+    t_aware = c._heap[0][0]
+    assert t_aware == 120 - 48
+    # an uncached destination still pays the full context
+    req2 = Request(prompt_len=100, max_new_tokens=16,
+                   prompt_tokens=list(range(100)))
+    req2.prefill_pos, req2.output_len = 100, 20
+    c._start_transfer(req2, StubInst(0), StubInst(0), now=0.0, kind="place")
+    assert c.transfer_bytes == (120 - 48) * 10 + 120 * 10
+
+
+# ---------------------------------------------------------------------------
+# slow tier: executor parity on a real (reduced) model
+# ---------------------------------------------------------------------------
+
+from repro.core.estimator import CostModel                    # noqa: E402
+from repro.core.hw import InstanceSpec                        # noqa: E402
+from repro.core.instance import D_HEAVY, P_HEAVY, Instance    # noqa: E402
+from repro.engine.engine import JaxExecutor                   # noqa: E402
+from repro.engine.request import Request                      # noqa: E402
+from repro.models import transformer as tf                    # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cost = CostModel(cfg, InstanceSpec(tp=1))
+    return cfg, params, cost
+
+
+def _drive(inst, reqs, guard=300):
+    now, g = 0.0, 0
+    while not all(r.done() for r in reqs) and g < guard:
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        g += 1
+        for r in done:
+            inst.admit_decode(r)
+    assert all(r.done() for r in reqs)
+    return now
+
+
+def _make(cfg, params, cost, *, batched, paged=None, prefix=False,
+          n_slots=5, chunk=32, hbm_blocks=512):
+    ex = JaxExecutor(cfg, params, n_slots=n_slots, max_seq=256,
+                     batched=batched, t_buckets=(8, 16, 32), paged=paged,
+                     prefix_cache=prefix)
+    inst = Instance(0, D_HEAVY, chunk, cost, ex, hbm_blocks=hbm_blocks)
+    return ex, inst
+
+
+@pytest.mark.slow
+def test_paged_matches_rowwise_uneven_buckets(setup):
+    """Greedy parity across uneven prompt lengths spanning multiple T
+    buckets, with decode mixing into prefill iterations — the fused
+    mixed-batch call must be token-exact vs. the row-wise oracle."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(5)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (9, 14, 33, 47)]
+
+    def gen(batched, paged):
+        ex, inst = _make(cfg, params, cost, batched=batched, paged=paged)
+        assert ex.paged == (paged if paged is not None else batched)
+        reqs = [Request(prompt_len=len(p), max_new_tokens=6,
+                        hidden_output_len=6, prompt_tokens=list(p))
+                for p in prompts]
+        for r in reqs:
+            inst.enqueue_prefill(r)
+        _drive(inst, reqs)
+        return [r.output_tokens for r in reqs]
+
+    ref = gen(batched=False, paged=False)
+    assert gen(batched=True, paged=True) == ref
+    # admission was bounded by blocks actually referenced: the unified
+    # allocator is the executor's
+    ex, inst = _make(cfg, params, cost, batched=True, paged=True)
+    assert inst.allocator is ex.kv.allocator
+
+
+@pytest.mark.slow
+def test_paged_prefix_adoption_token_exact(setup):
+    """Sequential waves sharing a prefix: the paged hit is pure
+    block-table aliasing (references on retained blocks), and greedy
+    outputs match the uncached row-wise oracle exactly."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(11)
+    shared = list(rng.integers(1, cfg.vocab_size, size=32))
+    waves = [[shared + list(rng.integers(1, cfg.vocab_size, size=9))],
+             [shared + list(rng.integers(1, cfg.vocab_size, size=17))],
+             [list(shared)]]
+
+    def run(batched, paged, prefix):
+        ex, inst = _make(cfg, params, cost, batched=batched, paged=paged,
+                         prefix=prefix, n_slots=6)
+        outs, reqs_all, now = [], [], 0.0
+        for wave in waves:
+            reqs = [Request(prompt_len=len(p), max_new_tokens=6,
+                            hidden_output_len=6, prompt_tokens=list(p))
+                    for p in wave]
+            reqs_all.extend(reqs)
+            for r in reqs:
+                inst.enqueue_prefill(r)
+            g = 0
+            while not all(r.done() for r in reqs) and g < 300:
+                dur, done, _ = inst.run_iteration(now)
+                now += dur
+                g += 1
+                for r in done:
+                    inst.admit_decode(r)
+            assert all(r.done() for r in reqs)
+        return [r.output_tokens for r in reqs_all], ex, inst
+
+    ref, _, _ = run(batched=False, paged=False, prefix=False)
+    got, ex, inst = run(batched=True, paged=True, prefix=True)
+    assert got == ref
+    assert inst.cache_hits == 2
+    assert ex.prefix_adoptions == 2               # both hits were aliases
+    assert ex.prefix_copies == 0                  # and none was a gather
+    assert inst.cached_prefill_tokens == 32 + 16
+
+
+@pytest.mark.slow
+def test_paged_migration_round_trip_token_exact(setup):
+    """eject/inject between two paged engines mid-decode ships only the
+    owned blocks and must not change greedy generation."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(6)
+    prompt = list(rng.integers(1, cfg.vocab_size, size=26))
+
+    def run_migrated(batched, paged):
+        exA, iA = _make(cfg, params, cost, batched=batched, paged=paged,
+                        n_slots=4, chunk=16)
+        exB, iB = _make(cfg, params, cost, batched=batched, paged=paged,
+                        n_slots=4, chunk=16)
+        iB.itype = P_HEAVY
+        req = Request(prompt_len=len(prompt), max_new_tokens=8,
+                      hidden_output_len=8, prompt_tokens=list(prompt))
+        iA.enqueue_prefill(req)
+        now = 0.0
+        while req.prefill_remaining > 0:
+            dur, _, _ = iA.run_iteration(now)
+            now += dur
+        iA.admit_decode(req)
+        for _ in range(3):
+            dur, _, _ = iA.run_iteration(now)
+            now += dur
+        state = iA.eject(req)
+        if paged:
+            assert "paged_blocks" in state
+            # only blocks covering the context ship, not headroom
+            assert state["n_blocks"] == -(-state["pos"] // 16)
+        iB.inject(req, state)
+        while not req.done():
+            dur, _, _ = iB.run_iteration(now)
+            now += dur
+        return req.output_tokens
+
+    assert run_migrated(True, True) == run_migrated(False, False)
+
+
+@pytest.mark.slow
+def test_migration_into_full_pool_defers_until_admission(setup):
+    """Inject into a memory-full paged instance must not crash: the
+    landing is deferred and materialized by admission once blocks free
+    up — and the continuation stays token-exact."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(41)
+    prompt = list(rng.integers(1, cfg.vocab_size, size=26))
+
+    def run(tight):
+        exA, iA = _make(cfg, params, cost, batched=True, paged=True,
+                        n_slots=4, chunk=32)
+        # destination pool: 10 blocks — an occupier (6 blocks) leaves
+        # too little for the migrated context (6 blocks) until it frees
+        exB = JaxExecutor(cfg, params, n_slots=4, max_seq=256,
+                          batched=True, t_buckets=(8, 16, 32),
+                          hbm_blocks=10 if tight else 64)
+        iB = Instance(1, D_HEAVY, 32, cost, exB, hbm_blocks=512)
+        occupier = Request(prompt_len=30, max_new_tokens=3,
+                           hidden_output_len=3,
+                           prompt_tokens=list(
+                               rng.integers(1, cfg.vocab_size, size=30)))
+        iB.enqueue_prefill(occupier)
+        now = 0.0
+        while occupier.prefill_remaining > 0:
+            dur, done, _ = iB.run_iteration(now)
+            now += dur
+            for r in done:
+                iB.admit_decode(r)
+        req = Request(prompt_len=len(prompt), max_new_tokens=8,
+                      hidden_output_len=8, prompt_tokens=list(prompt))
+        iA.enqueue_prefill(req)
+        while req.prefill_remaining > 0:
+            dur, _, _ = iA.run_iteration(now)
+            now += dur
+        iA.admit_decode(req)
+        for _ in range(3):
+            dur, _, _ = iA.run_iteration(now)
+            now += dur
+        iB.inject(req, iA.eject(req))
+        if tight:
+            assert req.rid in exB._deferred_states    # pool was full
+        _drive(iB, [occupier, req], guard=400)
+        return req.output_tokens
+
+    assert run(tight=True) == run(tight=False)
+
+
+@pytest.mark.slow
+def test_donor_reregistration_after_migration_in(setup):
+    """A migrated-in request's prompt becomes adoptable on the
+    DESTINATION: a later request with the same prompt prefix gets a
+    prefix hit there (open ROADMAP item), on both engine paths."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(21)
+    prompt = list(rng.integers(1, cfg.vocab_size, size=48))
+
+    def run(batched, paged):
+        exA, iA = _make(cfg, params, cost, batched=batched, paged=paged,
+                        prefix=True, n_slots=6, chunk=64)
+        exB, iB = _make(cfg, params, cost, batched=batched, paged=paged,
+                        prefix=True, n_slots=6, chunk=64)
+        req = Request(prompt_len=len(prompt), max_new_tokens=10,
+                      hidden_output_len=10, prompt_tokens=list(prompt))
+        iA.enqueue_prefill(req)
+        now = 0.0
+        while req.prefill_remaining > 0:
+            dur, _, _ = iA.run_iteration(now)
+            now += dur
+        iA.admit_decode(req)
+        for _ in range(2):
+            dur, _, _ = iA.run_iteration(now)
+            now += dur
+        iB.inject(req, iA.eject(req))
+        while not req.done():
+            dur, _, _ = iB.run_iteration(now)
+            now += dur
+        # the migrated context must now be adoptable ON B
+        follower = Request(prompt_len=len(prompt), max_new_tokens=4,
+                           hidden_output_len=4,
+                           prompt_tokens=list(prompt))
+        assert iB.peek_prefix(follower) > 0
+        iB.enqueue_prefill(follower)
+        _drive(iB, [follower])
+        assert inst_hits(iB) >= 1
+        return follower.output_tokens
+
+    def inst_hits(inst):
+        return inst.cache_hits
+
+    ref_ex, ref_inst = _make(cfg, params, cost, batched=False, paged=False)
+    ref_req = Request(prompt_len=len(prompt), max_new_tokens=4,
+                      hidden_output_len=4, prompt_tokens=list(prompt))
+    ref_inst.enqueue_prefill(ref_req)
+    _drive(ref_inst, [ref_req])
+    assert run(True, True) == ref_req.output_tokens
+
+
+@pytest.mark.slow
+def test_prefix_aware_transfer_charges_suffix_only(setup):
+    """Cluster migration time/bytes charge only the non-shared suffix
+    when the destination caches the prompt prefix."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(31)
+    prompt = list(rng.integers(1, cfg.vocab_size, size=64))
+
+    exA, iA = _make(cfg, params, cost, batched=True, paged=True,
+                    prefix=True, n_slots=6, chunk=64)
+    exB, iB = _make(cfg, params, cost, batched=True, paged=True,
+                    prefix=True, n_slots=6, chunk=64)
+    # warm B with the same prompt so it caches the prefix
+    warm = Request(prompt_len=len(prompt), max_new_tokens=2,
+                   hidden_output_len=2, prompt_tokens=list(prompt))
+    iB.enqueue_prefill(warm)
+    _drive(iB, [warm])
+    req = Request(prompt_len=len(prompt), max_new_tokens=6,
+                  hidden_output_len=6, prompt_tokens=list(prompt))
+    shared = iB.peek_migration_prefix(req)
+    assert shared > 0
+    # the charged context shrinks by exactly the destination's hit
+    full = cost.transfer_time(req.prompt_len + 3)
+    aware = cost.transfer_time(max(req.prompt_len + 3 - shared, 0))
+    assert aware < full
+
+
+@pytest.mark.slow
+def test_mixed_step_is_single_jit_call(monkeypatch):
+    """The paged executor must issue exactly ONE fused call per
+    iteration, prefill and decode together."""
+    cfg = reduced_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cost = CostModel(cfg, InstanceSpec(tp=1))
+    ex = JaxExecutor(cfg, params, n_slots=4, max_seq=64,
+                     batched=True, t_buckets=(8, 16))
+    inst = Instance(0, D_HEAVY, 8, cost, ex, hbm_blocks=256)
+    calls = []
+    real = ex._mixed_fused
+    ex._mixed_fused = lambda *a, **k: (calls.append(1), real(*a, **k))[1]
+    ra = Request(prompt_len=12, max_new_tokens=4, hidden_output_len=4,
+                 prompt_tokens=list(range(1, 13)))
+    rb = Request(prompt_len=20, max_new_tokens=4, hidden_output_len=4,
+                 prompt_tokens=list(range(1, 21)))
+    inst.enqueue_prefill(ra)
+    now = 0.0
+    while ra.prefill_remaining > 0:               # prompt 12 spans 2 chunks
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        for r in done:
+            inst.admit_decode(r)
+    inst.enqueue_prefill(rb)
+    calls.clear()
+    inst.run_iteration(now)                       # mixed: rb chunk + ra step
+    assert len(calls) == 1
+    assert ra.output_len >= 2                     # the decode ran in it
+    assert rb.prefill_pos > 0                     # and the prefill did too
