@@ -20,6 +20,7 @@ MODULES = [
     "fig18_breakdown",       # Fig 18 (C6)
     "fig19_overhead",        # Fig 19 (C7)
     "prefix_cache_bench",    # shared-prefix KV cache vs. no-cache baseline
+    "controller_bench",      # online slider controller vs. static/offline
     "kernel_bench",          # kernels microbench
     "roofline_report",       # dry-run roofline table
 ]

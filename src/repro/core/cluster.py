@@ -7,15 +7,27 @@ Events: ARRIVAL (proxy routes prefill), ITER (an instance executes one
 mixed batch), TRANSFER (a KV/state migration lands).  Migration latency
 is charged via CostModel.transfer_time — asynchronous, off the critical
 path, as in the paper's vLLM implementation (§3.5).
+
+The loop is INCREMENTAL: ``submit`` enqueues an arrival, ``step``
+processes exactly one event, and ``peek_time`` exposes the next event
+time — the online serving runtime (``repro.serving``) drives these
+directly, ingesting open-loop arrivals as they occur instead of a
+pre-materialized list.  ``run`` is the batch convenience wrapper the
+simulator and benchmarks use.
+
+Role reconfiguration (drain-and-flip): ``request_role_flip`` stages a
+P-heavy<->D-heavy flip on an instance; its decode population is migrated
+away through the ordinary TRANSFER machinery (no in-flight request
+dropped) and the flip lands once the decode side is empty.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.estimator import CostModel
-from repro.core.instance import Instance
+from repro.core.instance import D_HEAVY, Instance
 from repro.core.latency import SLO, RunStats
 from repro.core.policies import BasePolicy
 from repro.engine.request import Request, State
@@ -30,12 +42,18 @@ class Cluster:
         self.instances = policy.instances
         self._heap: list = []
         self._seq = itertools.count()
+        self._inst_by_id = {i.iid: i for i in self.instances}
         self._iter_scheduled: Dict[int, bool] = {
             i.iid: False for i in self.instances}
+        self.now = 0.0
         self.transfer_count = 0
         self.transfer_bytes = 0
         self.backflow_count = 0
         self.degrade_count = 0
+        self.drain_count = 0
+        # observer hooks for the online serving loop (None in batch mode)
+        self.on_finish: Optional[Callable[[Request, float], None]] = None
+        self.on_reject: Optional[Callable[[Request, float], None]] = None
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: int, data):
@@ -48,7 +66,8 @@ class Cluster:
 
     def _start_transfer(self, req: Request, src: Instance, dst: Instance,
                         now: float, kind: str):
-        """kind: 'place' (prefill->decode), 'degrade', or 'backflow'."""
+        """kind: 'place' (prefill->decode), 'degrade', 'backflow', or
+        'drain' (decode evacuation ahead of a role flip)."""
         # prefix-aware migration: when the destination already caches a
         # prefix of the request's prompt, only the non-shared suffix
         # ships (the landed state aliases the cached blocks)
@@ -63,66 +82,149 @@ class Cluster:
         self._push(now + t, TRANSFER, (req, dst, state, kind))
 
     # ------------------------------------------------------------------
+    # incremental interface (driven by repro.serving.server)
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, t: Optional[float] = None):
+        """Enqueue one arrival.  Online ingestion: the serving loop calls
+        this as requests show up; the batch ``run`` calls it up front."""
+        self._push(req.arrival if t is None else t, ARRIVAL, req)
+
+    def reroute(self, req: Request):
+        """Route a queued-but-unadmitted request again NOW, with full
+        ARRIVAL semantics (including early rejection and its observer
+        hook) — used when its original placement loses the ability to
+        serve it (e.g. the controller zeroes an instance's chunk)."""
+        self._handle(self.now, ARRIVAL, req)
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def step(self) -> Optional[tuple]:
+        """Pop and process exactly one event.  Returns ``(time, kind,
+        data)`` for observability, or None when the heap is empty."""
+        if not self._heap:
+            return None
+        now, _, kind, data = heapq.heappop(self._heap)
+        self.now = max(self.now, now)
+        self._handle(now, kind, data)
+        return now, kind, data
+
+    def _handle(self, now: float, kind: int, data):
+        if kind == ARRIVAL:
+            inst = self.policy.on_arrival(data, now)
+            if inst is None:               # early rejection
+                data.state = State.REJECTED
+                data.finish_time = now
+                if self.on_reject is not None:
+                    self.on_reject(data, now)
+                return
+            self._schedule_iter(inst, now)
+        elif kind == TRANSFER:
+            req, dst, state, move_kind = data
+            dst.inject(req, state)
+            if move_kind == "backflow":
+                req.reset_tpot_window()
+                self.backflow_count += 1
+            elif move_kind == "degrade":
+                self.degrade_count += 1
+            elif move_kind == "drain":
+                self.drain_count += 1
+            self._schedule_iter(dst, now)
+        else:  # ITER
+            inst = self._inst_by_id[data]
+            self._iter_scheduled[inst.iid] = False
+            dur, prefill_done, finished = inst.run_iteration(now)
+            end = now + dur
+            if self.on_finish is not None:
+                for req in finished:
+                    self.on_finish(req, end)
+            for req in prefill_done:
+                target, needs_transfer = self.policy.on_prefill_done(
+                    req, inst, end)
+                if needs_transfer:
+                    self._start_transfer(req, inst, target, end, "place")
+                else:
+                    target.admit_decode(req)
+                    self._schedule_iter(target, end)
+            for (req, src, dst, is_backflow) in (
+                    self.policy.select_migrations(end, inst)):
+                self._start_transfer(req, src, dst, end,
+                                     "backflow" if is_backflow
+                                     else "degrade")
+                self._schedule_iter(dst, end)
+            if inst.pending_flip is not None:
+                self._drain_step(inst, end)
+            if inst.has_work():
+                if dur == 0.0:
+                    # nothing schedulable this tick (e.g. oversized
+                    # head-of-line request): back off instead of
+                    # spinning at the same timestamp
+                    self._schedule_iter(inst, end + 0.01)
+                else:
+                    self._schedule_iter(inst, end)
+
+    # ------------------------------------------------------------------
+    # drain-and-flip role reconfiguration
+    # ------------------------------------------------------------------
+    def request_role_flip(self, inst: Instance, itype: str,
+                          chunk_size: int) -> bool:
+        """Stage a role flip; decode residents are evacuated through the
+        migration machinery over the following iterations and the flip
+        lands once the instance's decode side is empty.  Returns True if
+        the flip was staged (or applied immediately)."""
+        if inst.pending_flip is not None:
+            return False
+        inst.begin_flip(itype, chunk_size)
+        if not inst.apply_flip():          # something to drain
+            self._schedule_iter(inst, self.now)
+        return True
+
+    def _drain_step(self, inst: Instance, now: float):
+        """Migrate a draining instance's decode residents to the least
+        decode-loaded non-draining instance, then land the flip."""
+        for req in inst.drain_candidates():
+            if req.state == State.MIGRATING:
+                continue
+            dst = self._drain_destination(inst)
+            if dst is None:
+                break                      # nowhere to go: retry next iter
+            self._start_transfer(req, inst, dst, now, "drain")
+            self._schedule_iter(dst, now)
+        inst.apply_flip()
+
+    def _drain_destination(self, inst: Instance) -> Optional[Instance]:
+        cands = [i for i in self.instances
+                 if i is not inst and not i.draining]
+        if not cands:
+            return None
+        # decodes prefer a D-heavy home; fall back to any peer
+        d = [i for i in cands if i.itype == D_HEAVY]
+        return min(d or cands, key=lambda i: i.decode_load())
+
+    # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request], until: Optional[float] = None
             ) -> List[Request]:
         for r in requests:
-            self._push(r.arrival, ARRIVAL, r)
-        inst_by_id = {i.iid: i for i in self.instances}
+            self.submit(r)
         while self._heap:
-            now, _, kind, data = heapq.heappop(self._heap)
-            if until is not None and now > until:
+            if until is not None and self.peek_time() > until:
                 break
-            if kind == ARRIVAL:
-                inst = self.policy.on_arrival(data, now)
-                if inst is None:               # early rejection
-                    data.state = State.REJECTED
-                    data.finish_time = now
-                    continue
-                self._schedule_iter(inst, now)
-            elif kind == TRANSFER:
-                req, dst, state, move_kind = data
-                dst.inject(req, state)
-                if move_kind == "backflow":
-                    req.reset_tpot_window()
-                    self.backflow_count += 1
-                elif move_kind == "degrade":
-                    self.degrade_count += 1
-                self._schedule_iter(dst, now)
-            else:  # ITER
-                inst = inst_by_id[data]
-                self._iter_scheduled[inst.iid] = False
-                dur, prefill_done, _finished = inst.run_iteration(now)
-                end = now + dur
-                for req in prefill_done:
-                    target, needs_transfer = self.policy.on_prefill_done(
-                        req, inst, end)
-                    if needs_transfer:
-                        self._start_transfer(req, inst, target, end, "place")
-                    else:
-                        target.admit_decode(req)
-                        self._schedule_iter(target, end)
-                for (req, src, dst, is_backflow) in (
-                        self.policy.select_migrations(end, inst)):
-                    self._start_transfer(req, src, dst, end,
-                                         "backflow" if is_backflow
-                                         else "degrade")
-                    self._schedule_iter(dst, end)
-                if inst.has_work():
-                    if dur == 0.0:
-                        # nothing schedulable this tick (e.g. oversized
-                        # head-of-line request): back off instead of
-                        # spinning at the same timestamp
-                        self._schedule_iter(inst, end + 0.01)
-                    else:
-                        self._schedule_iter(inst, end)
+            self.step()
         return list(requests)
 
     # ------------------------------------------------------------------
     def stats(self, requests, slo: SLO, qps: float) -> RunStats:
-        wall = max((r.finish_time or 0.0) for r in requests)
+        wall = max(((r.finish_time or 0.0) for r in requests), default=0.0)
         return RunStats(
             list(requests), slo, qps, wall,
             cache_lookups=sum(i.cache_lookups for i in self.instances),
             cache_hits=sum(i.cache_hits for i in self.instances),
             saved_prefill_tokens=sum(i.cached_prefill_tokens
-                                     for i in self.instances))
+                                     for i in self.instances),
+            early_rejections=getattr(self.policy.proxy, "rejected_count", 0),
+            role_flips=self.role_flip_count)
+
+    @property
+    def role_flip_count(self) -> int:
+        """Landed flips, from the per-instance ground truth."""
+        return sum(i.role_flips for i in self.instances)

@@ -31,34 +31,65 @@ class CostModel:
     cfg: ModelConfig
     inst: InstanceSpec = InstanceSpec()
 
+    def __post_init__(self):
+        # The estimator sits on the proxy's per-arrival hot path (every
+        # routing decision sums prefill_time over whole queues), so the
+        # config-derived constants are computed once here and the
+        # context-dependent lookups are memoized.  Pure caching — the
+        # formulas are unchanged.  (object.__setattr__: frozen dataclass.)
+        object.__setattr__(self, "_itemsize", None)
+        object.__setattr__(self, "_active_params", None)
+        object.__setattr__(self, "_weight_bytes", None)
+        object.__setattr__(self, "_kv_per_token", None)
+        object.__setattr__(self, "_state_bytes_cache", {})
+        object.__setattr__(self, "_prefill_time_cache", {})
+        object.__setattr__(self, "_attn_const", None)
+
     # ------------------------------------------------------------------
     # static model quantities
     # ------------------------------------------------------------------
     @property
     def itemsize(self) -> int:
-        import jax.numpy as jnp
-        return jnp.dtype(self.cfg.dtype).itemsize
+        if self._itemsize is None:
+            import jax.numpy as jnp
+            object.__setattr__(self, "_itemsize",
+                               jnp.dtype(self.cfg.dtype).itemsize)
+        return self._itemsize
 
     @property
     def active_params(self) -> int:
         # matmul-relevant weights: exclude the embedding gather
-        return (self.cfg.active_param_count()
+        if self._active_params is None:
+            object.__setattr__(
+                self, "_active_params",
+                self.cfg.active_param_count()
                 - self.cfg.vocab_size * self.cfg.d_model)
+        return self._active_params
 
     @property
     def weight_bytes(self) -> int:
-        return self.cfg.active_param_count() * self.itemsize
+        if self._weight_bytes is None:
+            object.__setattr__(self, "_weight_bytes",
+                               self.cfg.active_param_count() * self.itemsize)
+        return self._weight_bytes
 
     def kv_bytes_per_token(self) -> float:
         """KV/state bytes appended per context token (amortized; SSM state
         is O(1) so contributes ~0 per token)."""
-        b = self.cfg.kv_cache_bytes(1, 4096) / 4096
-        return b
+        if self._kv_per_token is None:
+            object.__setattr__(self, "_kv_per_token",
+                               self.cfg.kv_cache_bytes(1, 4096) / 4096)
+        return self._kv_per_token
 
     def state_bytes(self, context: int) -> int:
         """Total cache bytes for one request at a given context length —
         the migration payload of flowing decode scheduling."""
-        return self.cfg.kv_cache_bytes(1, max(context, 1))
+        context = max(context, 1)
+        b = self._state_bytes_cache.get(context)
+        if b is None:
+            b = self.cfg.kv_cache_bytes(1, context)
+            self._state_bytes_cache[context] = b
+        return b
 
     # ------------------------------------------------------------------
     # per-phase primitives
@@ -70,7 +101,12 @@ class CostModel:
         """Attention score+value FLOPs for ``tokens`` new tokens whose
         context grows from ctx_start."""
         cfg = self.cfg
-        n_attn = cfg.attn_layer_count()
+        if self._attn_const is None:
+            n_attn = cfg.attn_layer_count()
+            object.__setattr__(
+                self, "_attn_const",
+                (n_attn, 4.0 * n_attn * cfg.num_heads * cfg.head_dim))
+        n_attn, flop_coeff = self._attn_const
         if n_attn == 0 or cfg.num_heads == 0:
             # SSM: linear-in-T mixer; fold into a small constant per token
             return 0.0
@@ -83,8 +119,7 @@ class CostModel:
                        + n_global * avg_ctx) / n_attn
         else:
             eff_ctx = avg_ctx
-        return (4.0 * n_attn * cfg.num_heads * cfg.head_dim
-                * tokens * eff_ctx)
+        return flop_coeff * tokens * eff_ctx
 
     def _kv_read_bytes(self, context: int) -> float:
         return self.state_bytes(context)
@@ -137,12 +172,18 @@ class CostModel:
         every iteration (Algorithm 2's E term)."""
         if chunk_size <= 0:
             return float("inf")
+        key = (prompt_len, chunk_size, decode_batch)
+        cached = self._prefill_time_cache.get(key)
+        if cached is not None:
+            return cached
         total, pos = 0.0, 0
         while pos < prompt_len:
             c = min(chunk_size, prompt_len - pos)
             total += self.iteration_time(
                 [(c, pos)], [512] * decode_batch)
             pos += c
+        if len(self._prefill_time_cache) < 1 << 18:
+            self._prefill_time_cache[key] = total
         return total
 
     def decode_iteration_time(self, batch: int, avg_context: int,

@@ -105,6 +105,13 @@ class Instance:
         self.prefill_queue: deque[Request] = deque()
         self.decoding: Dict[int, Request] = {}
         self.pending_decode: deque[Request] = deque()
+        # online-serving hooks: a per-token callback installed by the
+        # serving loop (streaming), and drain-and-flip reconfiguration
+        # state driven by the adaptive slider controller
+        self.token_sink: Optional[Callable[[Request, float], None]] = None
+        self.draining: bool = False
+        self.pending_flip: Optional[Tuple[str, int]] = None
+        self.role_flips: int = 0
         # accounting
         self.busy_until: float = 0.0
         self.iterations: int = 0
@@ -162,6 +169,34 @@ class Instance:
     def decode_load(self) -> int:
         """HBM usage proxy for proxy-side load balancing (paper §3.3 ①)."""
         return self.allocator.used_blocks
+
+    # ------------------------------------------------------------------
+    # role reconfiguration (drain-and-flip)
+    # ------------------------------------------------------------------
+    def begin_flip(self, itype: str, chunk_size: int):
+        """Stage a role flip: the instance stops accepting decode
+        placements (``draining``) while the cluster migrates its decode
+        population away; ``apply_flip`` lands once drained."""
+        self.pending_flip = (itype, chunk_size)
+        self.draining = True
+
+    def drain_candidates(self) -> List[Request]:
+        """Decode-side residents that must migrate before a staged flip
+        applies.  Prefill work is NOT drained — it keeps running through
+        the flip (the chunk size just changes underneath it)."""
+        return list(self.decoding.values()) + list(self.pending_decode)
+
+    def apply_flip(self) -> bool:
+        """Land a staged flip if the decode side is empty."""
+        if self.pending_flip is None:
+            return False
+        if self.decoding or self.pending_decode:
+            return False
+        self.itype, self.chunk_size = self.pending_flip
+        self.pending_flip = None
+        self.draining = False
+        self.role_flips += 1
+        return True
 
     # ------------------------------------------------------------------
     # iteration
@@ -259,7 +294,10 @@ class Instance:
         if self.allocator.holds(req.rid):
             self.allocator.free(req.rid)
         self.executor.release(req)
-        # recompute: remaining prefill = full context (prompt + generated)
+        # recompute: remaining prefill = full context (prompt + generated);
+        # the engine recovers true cache positions (and the regenerated
+        # token stream) via recompute_offset
+        req.recompute_offset = req.output_len
         req.prefill_pos = -req.output_len
         req.state = State.QUEUED
         self.prefill_queue.appendleft(req)
@@ -292,8 +330,13 @@ class Instance:
                     # publish the prompt's blocks for future prefix hits
                     self.prefix_cache.commit(req.rid, req.prompt_tokens)
                 # prefill emits the first token — which may already be EOS
+                # (or already exhaust the request's output budget:
+                # single-token scoring/classification traffic never
+                # reaches decode)
                 req.record_token(end)
-                if eos.get(req.rid, False):
+                if self.token_sink is not None:
+                    self.token_sink(req, end)
+                if eos.get(req.rid, False) or req.done():
                     req.state = State.FINISHED
                     req.finish_time = end
                     self.remove_request(req)
@@ -304,6 +347,8 @@ class Instance:
         for req in plan.decode_reqs:
             req.interference_tokens += plan.prefill_tokens
             req.record_token(end)
+            if self.token_sink is not None:
+                self.token_sink(req, end)
             self.decode_token_count += 1
             if eos.get(req.rid, False) or req.done():
                 req.state = State.FINISHED
@@ -329,6 +374,8 @@ class Instance:
         """Remove for migration; returns opaque engine state."""
         state = self.executor.extract_state(req)
         self.decoding.pop(req.rid, None)
+        if req in self.pending_decode:
+            self.pending_decode.remove(req)
         if self.allocator.holds(req.rid):
             self.allocator.free(req.rid)
         self.executor.release(req)

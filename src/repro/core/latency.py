@@ -55,6 +55,13 @@ class RunStats:
     cache_lookups: int = 0
     cache_hits: int = 0
     saved_prefill_tokens: int = 0
+    # online-serving counters: proxy early-rejection drops and adaptive
+    # controller activity (slider moves = chunk retunes + role flips),
+    # surfaced here so sweeps and benches report them without log
+    # scraping
+    early_rejections: int = 0
+    slider_moves: int = 0
+    role_flips: int = 0
 
     @property
     def slo_attainment(self) -> float:
@@ -94,6 +101,11 @@ class RunStats:
         if self.cache_lookups:
             out["cache_hit_rate"] = round(self.cache_hit_rate, 4)
             out["saved_prefill_tokens"] = self.saved_prefill_tokens
+        if self.early_rejections:
+            out["early_rejections"] = self.early_rejections
+        if self.slider_moves or self.role_flips:
+            out["slider_moves"] = self.slider_moves
+            out["role_flips"] = self.role_flips
         return out
 
 

@@ -100,7 +100,9 @@ class PDDisaggregationPolicy(BasePolicy):
         return inst
 
     def on_prefill_done(self, req, inst, now):
-        target = min(self.d_instances, key=lambda i: i.decode_load())
+        cands = [i for i in self.d_instances if not i.draining] \
+            or self.d_instances
+        target = min(cands, key=lambda i: i.decode_load())
         return target, True
 
 
@@ -144,18 +146,22 @@ class TaiChiPolicy(BasePolicy):
     def select_migrations(self, now: float, inst: Instance):
         if not self.enable_flowing:
             return []
+        if inst.draining:
+            return []                      # drain machinery owns its moves
         moves = []
         s = self.sliders
+        d_avail = [i for i in self.d_instances if not i.draining]
+        p_avail = [i for i in self.p_instances if not i.draining]
         if inst.itype == P_HEAVY:
             for req in flowing.select_backflow(inst, self.tpot_slo,
                                                s.alpha, now):
-                dst = min(self.d_instances, key=lambda i: i.decode_load(),
+                dst = min(d_avail, key=lambda i: i.decode_load(),
                           default=None)
                 if dst is not None and dst is not inst:
                     moves.append((req, inst, dst, True))
         else:
             for req in flowing.select_degrade(inst, s.watermark):
-                dst = min(self.p_instances, key=lambda i: i.decode_load(),
+                dst = min(p_avail, key=lambda i: i.decode_load(),
                           default=None)
                 if dst is not None and dst is not inst:
                     moves.append((req, inst, dst, False))

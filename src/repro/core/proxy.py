@@ -3,7 +3,9 @@ plus the decode-placement rule of §3.3 step ①.
 
 Prefill routing: for each instance estimate
     TTFT_hat = Q (queued prefill exec time) + E (this request's exec time)
-             + T (KV transfer, P-heavy only — its decode will move away)
+             + T (KV transfer, P-heavy only — its decode will move away;
+                  charged against the best decode-placement candidate's
+                  cached prefix, so destination hits shrink the estimate)
 keep instances with TTFT_hat + elapsed-queue-age < tpft SLO (feasible set),
 pick the feasible instance with the FEWEST queued prefill tokens (this
 preferentially degrades short prefills onto D-heavy instances, while
@@ -74,21 +76,50 @@ class Proxy:
                                       decode_batch=len(inst.decoding))
 
     def _transfer_time(self, inst: Instance, req: Request) -> float:
+        """T: KV transfer charge for a P-heavy placement (its decode will
+        move to a D-heavy instance after prefill).
+
+        Destination-aware: the transfer is charged against the BEST
+        decode-placement candidate — the least decode-loaded D-heavy
+        instance, the same rule ``place_decode`` applies — and only the
+        suffix that candidate does not already cache ships (prefix-aware
+        migration).  A big prefix hit on the destination therefore
+        shrinks TTFT_hat, which can make a P-heavy placement feasible
+        for a prompt the full-transfer charge would have excluded."""
         if inst.itype != P_HEAVY:
             return 0.0
-        return self.cost.transfer_time(req.prompt_len)
+        return self.cost.transfer_time(self._transfer_moved(req))
+
+    def _transfer_moved(self, req: Request) -> int:
+        """Tokens a P-heavy placement would actually ship — independent
+        of the prefill candidate, so ``schedule_prefill`` computes it
+        once per arrival (the prefix match walks the whole prompt)."""
+        dcands = [i for i in self.instances
+                  if i.itype == D_HEAVY and not i.draining]
+        if not dcands:
+            return req.prompt_len
+        dst = min(dcands, key=lambda i: i.decode_load())
+        return max(req.prompt_len - dst.peek_migration_prefix(req), 0)
 
     # ------------------------------------------------------------------
     def schedule_prefill(self, req: Request, now: float) -> Instance:
         """Algorithm 2 (+ cache-aware effective lengths)."""
         feasible: List[tuple] = []             # (instance, prefix hit)
+        t_place = None                         # lazy: P-heavy cands only
         for inst in self.instances:
             if inst.chunk_size <= 0:
                 continue                       # pure-decode instance
             cached = self._peek_hit(inst, req)
             Q = self._queue_time(inst)
             E = self._exec_time(inst, req, cached)
-            T = self._transfer_time(inst, req)
+            if inst.itype == P_HEAVY:
+                # T is destination-derived — identical for every P-heavy
+                # candidate, so the prefix match runs once per arrival
+                if t_place is None:
+                    t_place = self._transfer_time(inst, req)
+                T = t_place
+            else:
+                T = 0.0
             if Q + E + T < self.ttft_slo:
                 feasible.append((inst, cached))
         if feasible:
@@ -113,13 +144,17 @@ class Proxy:
     # ------------------------------------------------------------------
     def place_decode(self, req: Request, prefill_inst: Instance,
                      d_instances: Sequence[Instance]) -> Instance:
-        """§3.3 step ①: in-place on D-heavy, else least-loaded D-heavy."""
-        if prefill_inst.itype == D_HEAVY or not d_instances:
+        """§3.3 step ①: in-place on D-heavy, else least-loaded D-heavy.
+        Draining instances (staged role flip) accept no new decodes."""
+        cands = [i for i in d_instances if not i.draining]
+        if (prefill_inst.itype == D_HEAVY and not prefill_inst.draining) \
+                or not cands:
             return prefill_inst
-        return min(d_instances, key=lambda i: i.decode_load())
+        return min(cands, key=lambda i: i.decode_load())
 
     def least_loaded(self, itype: str) -> Optional[Instance]:
-        cands = [i for i in self.instances if i.itype == itype]
+        cands = [i for i in self.instances
+                 if i.itype == itype and not i.draining]
         if not cands:
             return None
         return min(cands, key=lambda i: i.decode_load())

@@ -49,6 +49,27 @@ from repro.models import transformer as tf
 from repro.models.config import ATTN, ModelConfig
 
 
+class MigrationFormatError(ValueError):
+    """A migrated engine state's KV format (dense row vs. paged blocks)
+    does not match the destination executor's format.  Dense<->paged
+    cross-migration is unsupported — migrate between like engines."""
+
+
+def _prefill_window(req: Request, start: int, take: int):
+    """Map an instance-space prefill window to (token chunk, cache
+    position).  Normally the identity on ``prompt_tokens``; after a
+    preemption-by-recompute the request re-prefills from negative
+    ``prefill_pos`` and the true stream is prompt + the output tokens
+    generated before eviction, at position ``start + recompute_offset``
+    (see Request.recompute_offset)."""
+    off = req.recompute_offset
+    if not off:
+        return req.prompt_tokens[start:start + take], start
+    pos = start + off
+    stream = list(req.prompt_tokens) + list(req.output_tokens[:off])
+    return stream[pos:pos + take], pos
+
+
 def packable(cfg: ModelConfig) -> bool:
     """True if T-padded packed prefill is token-exact for this config:
     every layer is full-cache global attention (padding KV writes are
@@ -380,8 +401,12 @@ class JaxExecutor:
         slot = self._acquire_slot(req.rid)
         if self.paged:
             if not self._external_bookkeeping:
+                # recompute_offset: a preempted request re-prefills its
+                # whole context (prompt + regenerated output), not just
+                # the prompt
                 self.kv.ensure(req.rid,
-                               max(req.prompt_len, 1) + self.HEADROOM)
+                               max(req.prompt_len + req.recompute_offset,
+                                   1) + self.HEADROOM)
             self.kv.refresh_row(slot, req.rid)
         else:
             self.cache = migrate.zero_row(self.cache, slot)
@@ -481,9 +506,9 @@ class JaxExecutor:
         rows = []   # (req, slot, start, chunk, completes, is_decode)
         if plan.prefill_items:
             for req, start, take, completes in plan.prefill_rows():
-                rows.append((req, self.slots.slot(req.rid), start,
-                             req.prompt_tokens[start:start + take],
-                             completes, False))
+                chunk, pos = _prefill_window(req, start, take)
+                rows.append((req, self.slots.slot(req.rid), pos,
+                             chunk, completes, False))
         for req in plan.decode_reqs:
             slot = self.slots.slot(req.rid)
             # clamp like the jit step does: contexts past max_seq keep
@@ -556,11 +581,12 @@ class JaxExecutor:
         return eos
 
     def _prefill_packed_call(self, rows, eos):
-        chunks = [req.prompt_tokens[start:start + take]
-                  for req, start, take, _ in rows]
+        windows = [_prefill_window(req, start, take)
+                   for req, start, take, _ in rows]
+        chunks = [c for c, _ in windows]
         row_slots = self.slots.slots_of([req.rid for req, _, _, _ in rows])
         packed = batching.pack_prefill(
-            chunks, [start for _, start, _, _ in rows], row_slots,
+            chunks, [pos for _, pos in windows], row_slots,
             self.n_slots, self.t_buckets)
         toks, self.cache = self._prefill_packed(
             self.params, self.cache, packed.tokens, packed.start,
@@ -568,7 +594,7 @@ class JaxExecutor:
         toks = np.asarray(toks)
         for i, (req, start, take, completes) in enumerate(rows):
             slot = row_slots[i]
-            self.positions[slot] = start + take
+            self.positions[slot] = windows[i][1] + take
             if completes:
                 tok = int(toks[i])
                 req.output_tokens.append(tok)
@@ -580,13 +606,13 @@ class JaxExecutor:
     def _prefill_slot_calls(self, rows, eos):
         for req, start, take, completes in rows:
             slot = self.slots.slot(req.rid)
-            chunk = np.asarray(req.prompt_tokens[start:start + take],
-                               np.int32)[None]
+            tokens, pos = _prefill_window(req, start, take)
+            chunk = np.asarray(tokens, np.int32)[None]
             tok, self.cache = self._prefill_slot(
                 self.params, self.cache, jnp.asarray(chunk),
-                jnp.full((1,), start, jnp.int32),
+                jnp.full((1,), pos, jnp.int32),
                 jnp.int32(slot), self._next_key())
-            self.positions[slot] = start + take
+            self.positions[slot] = pos + take
             if completes:
                 tok = int(tok[0])
                 req.output_tokens.append(tok)
@@ -601,15 +627,14 @@ class JaxExecutor:
         # --- chunked prefill (row-wise, exact shapes) ---
         for req, take in plan.prefill_items:
             slot = self.slots.slot(req.rid)
-            chunk = np.asarray(
-                req.prompt_tokens[req.prefill_pos:req.prefill_pos + take],
-                np.int32)[None]
-            start = jnp.full((1,), req.prefill_pos, jnp.int32)
+            tokens, pos = _prefill_window(req, req.prefill_pos, take)
+            chunk = np.asarray(tokens, np.int32)[None]
+            start = jnp.full((1,), pos, jnp.int32)
             last, row_cache = self._prefill_row(
                 self.params, self._row_cache(slot), jnp.asarray(chunk),
                 start, T=take)
             self._write_row_cache(slot, row_cache)
-            self.positions[slot] = req.prefill_pos + take
+            self.positions[slot] = pos + take
             if take == req.prefill_remaining:
                 # the sampled first token is NOT yet in the cache; it is
                 # written when fed to the next decode step at position
@@ -655,10 +680,19 @@ class JaxExecutor:
 
     def insert_state(self, req: Request, state):
         if self.paged:
-            if "paged_blocks" not in state:
-                raise ValueError("dense-row state cannot land in a paged "
-                                 "executor (migrate between like engines)")
+            if not isinstance(state, dict) or "paged_blocks" not in state:
+                raise MigrationFormatError(
+                    f"request {req.rid}: migrated state is in 'dense' "
+                    "row format but the destination executor is 'paged' "
+                    "— dense<->paged cross-migration is unsupported; "
+                    "migrate between like engines")
             return self._insert_state_paged(req, state)
+        if not isinstance(state, dict) or "row" not in state:
+            raise MigrationFormatError(
+                f"request {req.rid}: migrated state is in 'paged' block "
+                "format but the destination executor is 'dense' — "
+                "dense<->paged cross-migration is unsupported; migrate "
+                "between like engines")
         slot = self._acquire_slot(req.rid)
         self.cache = migrate.insert_row(self.cache, state["row"], slot)
         self.positions[slot] = state["pos"]

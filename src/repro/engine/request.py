@@ -49,6 +49,12 @@ class Request:
     state: State = State.QUEUED
     prefill_pos: int = 0                      # prompt tokens processed
     cached_prefix_len: int = 0                # tokens served from KV cache
+    # preemption-by-recompute: output length at the last preemption.  The
+    # re-prefill token stream is prompt + the first ``recompute_offset``
+    # output tokens, and the true cache position of a re-prefill chunk is
+    # ``prefill_pos + recompute_offset`` (prefill_pos restarts negative so
+    # the existing accounting — prefill_remaining, context_len — holds).
+    recompute_offset: int = 0
     output_len: int = 0                       # tokens emitted so far
     output_tokens: List[int] = dataclasses.field(default_factory=list)
 

@@ -1,16 +1,22 @@
 """Serving launcher: run a TaiChi (or baseline) cluster.
 
-Two modes:
+Three modes:
   --engine sim   event-driven simulator with estimator timing (default;
                  any registered arch, production scale)
   --engine jax   real JAX engine on local devices with reduced configs
-                 (CPU demo; tokens are really computed)
+                 (CPU demo; tokens are really computed), batch replay
+  --engine live  the ONLINE serving runtime on the real JAX engine:
+                 open-loop ingestion, per-token streaming, windowed
+                 telemetry snapshots, and (with --controller) live
+                 slider adaptation incl. drain-and-flip role changes
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
       --policy taichi --np 2 --nd 2 --sp 1024 --sd 256 --qps 80
   PYTHONPATH=src python -m repro.launch.serve --engine jax \
       --arch smollm-135m --qps 2 --n 16
+  PYTHONPATH=src python -m repro.launch.serve --engine live \
+      --arch smollm-135m --qps 3 --n 24 --controller --stream
 """
 from __future__ import annotations
 
@@ -25,13 +31,73 @@ from repro.core.hw import InstanceSpec
 from repro.core.latency import SLO
 from repro.core.policies import Sliders
 from repro.sim.simulator import ServingConfig, build_cluster, run_sim
-from repro.sim.workload import WORKLOADS
+from repro.sim.workload import WORKLOADS, LengthDist, WorkloadSpec
+
+#: reduced-config live/jax demo traffic (tokenized: the engine sees real
+#: token ids, so runs are reproducible across loops)
+TINY = WorkloadSpec("tiny",
+                    LengthDist(mu=3.4, sigma=0.4, lo=16, hi=128),
+                    LengthDist(mu=2.5, sigma=0.4, lo=4, hi=32),
+                    tokenized=True, vocab_size=4096)
+
+
+def _live_mode(args, slo: SLO):
+    """Online runtime on the real engine (reduced config, CPU-runnable):
+    tokens stream as they are computed, telemetry snapshots print as
+    JSON lines, and the controller may retune sliders mid-run."""
+    from repro.engine.engine import JaxExecutor
+    from repro.models import transformer as tf
+    from repro.serving import (ControllerConfig, ServingLoop,
+                               SliderController, WallClock)
+    cfg = reduced_config(args.arch)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    sc = ServingConfig(model=args.arch, tp=1, policy=args.policy,
+                       sliders=Sliders(n_p=args.np, n_d=args.nd,
+                                       s_p=min(args.sp, 64),
+                                       s_d=min(args.sd, 32)),
+                       hbm_blocks=512)
+    factory = lambda: JaxExecutor(cfg, params, n_slots=8, max_seq=512)
+    cluster = build_cluster(sc, slo, executor_factory=factory)
+    ctl = None
+    if args.controller:
+        ctl = SliderController(ControllerConfig(
+            epoch=args.epoch, cooldown=1,
+            sd_steps=(16, 32, 64)))        # reduced-config ladder
+    streamed = {"tokens": 0}
+
+    def on_token(req, t, tok):
+        streamed["tokens"] += 1
+        if args.stream:
+            print(f"[{t:8.3f}s] req{req.rid} token#{req.output_len} "
+                  f"id={tok}")
+
+    loop = ServingLoop(
+        cluster, slo,
+        arrivals=TINY.iter_requests(args.qps, seed=0,
+                                    max_new_tokens=32, limit=args.n),
+        controller=ctl, window=args.window, on_token=on_token,
+        snapshot_every=args.snapshot_every,
+        clock=WallClock() if args.pace else None, pace=args.pace)
+    loop.run()
+    for snap in loop.log.snapshots:
+        print(json.dumps({k: v for k, v in snap.items()
+                          if k != "instances"}))
+    st = loop.stats(args.qps)
+    print(json.dumps({**st.summary(),
+                      "policy": args.policy,
+                      "streamed_tokens": streamed["tokens"],
+                      "real_tokens": sum(len(r.output_tokens)
+                                         for r in loop.requests),
+                      "transfers": cluster.transfer_count,
+                      "controller_moves": (ctl.moves if ctl else [])},
+                     indent=2, default=str))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
-    ap.add_argument("--engine", choices=["sim", "jax"], default="sim")
+    ap.add_argument("--engine", choices=["sim", "jax", "live"],
+                    default="sim")
     ap.add_argument("--policy", default="taichi",
                     choices=["taichi", "aggregation", "disaggregation"])
     ap.add_argument("--np", type=int, default=2)
@@ -45,10 +111,26 @@ def main():
                     choices=sorted(WORKLOADS))
     ap.add_argument("--ttft-slo", type=float, default=1.5)
     ap.add_argument("--tpot-slo", type=float, default=0.030)
+    # live-mode knobs
+    ap.add_argument("--controller", action="store_true",
+                    help="live: adapt sliders online (epoch-based)")
+    ap.add_argument("--epoch", type=float, default=2.0,
+                    help="live: controller epoch seconds")
+    ap.add_argument("--window", type=float, default=5.0,
+                    help="live: telemetry window seconds")
+    ap.add_argument("--snapshot-every", type=float, default=5.0,
+                    help="live: telemetry snapshot cadence")
+    ap.add_argument("--stream", action="store_true",
+                    help="live: print every streamed token")
+    ap.add_argument("--pace", action="store_true",
+                    help="live: pace events to wall-clock time")
     args = ap.parse_args()
 
     slo = SLO(ttft=args.ttft_slo, tpot=args.tpot_slo)
     sliders = Sliders(n_p=args.np, n_d=args.nd, s_p=args.sp, s_d=args.sd)
+
+    if args.engine == "live":
+        return _live_mode(args, slo)
 
     if args.engine == "sim":
         sc = ServingConfig(model=args.arch, tp=args.tp, policy=args.policy,

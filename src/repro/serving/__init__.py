@@ -1,0 +1,11 @@
+"""Online serving runtime: continuous ingestion + streaming + adaptive
+slider control on top of the discrete-event cluster core."""
+from repro.serving.clock import VirtualClock, WallClock
+from repro.serving.controller import ControllerConfig, SliderController
+from repro.serving.metrics import MetricsLog, TelemetryWindow
+from repro.serving.server import RequestHandle, ServingLoop
+
+__all__ = [
+    "ControllerConfig", "MetricsLog", "RequestHandle", "ServingLoop",
+    "SliderController", "TelemetryWindow", "VirtualClock", "WallClock",
+]

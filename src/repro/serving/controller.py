@@ -1,0 +1,221 @@
+"""Epoch-based adaptive slider control.
+
+The paper's thesis is that one system spans the aggregation<->
+disaggregation spectrum by moving three sliders — R_PD (P-heavy :
+D-heavy instance ratio) and the chunk sizes S_P / S_D (§3.1) — but it
+positions them via *offline* search.  This controller moves them
+*online*: every ``epoch`` virtual seconds it reads the telemetry
+window's TTFT/TPOT attainment and walks the configuration toward
+whichever dimension is starved:
+
+* **TTFT starved** (prefill capacity short): raise S_D — D-heavy
+  instances take bigger prefill chunks (aggregation-ward).  When S_D is
+  maxed, flip the least decode-loaded D-heavy instance to P-heavy
+  (drain-and-flip via the cluster's migration machinery).
+* **TPOT starved** (decode interference high): lower S_D
+  (disaggregation-ward).  When S_D is floored, flip a P-heavy instance
+  to D-heavy.
+
+Moves are damped by a deadband around the attainment target, a cooldown
+of ``cooldown`` epochs after every move, and min-instance floors per
+role; both attainment signals starving simultaneously means the cluster
+is saturated — reconfiguration cannot help, so the controller holds
+(admission control, not slider motion, is the right tool there).
+
+The controller is deliberately model-free: it reads only *attained*
+service quality, so it works unchanged on the simulator and the real
+engine, and under workloads the offline search never saw.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.instance import D_HEAVY, P_HEAVY
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    epoch: float = 5.0          # seconds between control decisions
+    target: float = 0.9         # per-dimension attainment target
+    deadband: float = 0.03      # hysteresis below target before acting
+    cooldown: int = 1           # full epochs to hold after a move
+    # the S_D ladder; S_P stays at its configured value — the paper
+    # moves S_D for interference control, S_P mainly scales with prompt
+    # length, which routing already handles.  The floor is 64, not 0: a
+    # pure-decode instance strands whatever prefill work is already
+    # queued on it, and a minimal chunk keeps the corner reachable
+    # without that cliff (S_D=0 remains expressible as a static config).
+    sd_steps: Tuple[int, ...] = (64, 128, 256, 512, 1024)
+    min_p: int = 1              # role-count floors for R_PD flips
+    min_d: int = 1
+    min_evidence: int = 4       # windowed events needed before acting
+    # raising S_D is only safe while decode has real headroom: require
+    # windowed p90 TPOT below this fraction of the SLO, else go straight
+    # to a D->P flip (bigger chunks would trade one violation for
+    # another)
+    tpot_guard: float = 0.85
+    # a chunk move that breaks the other dimension is reverted and its
+    # direction embargoed for this many epochs (local search with tabu —
+    # prevents oscillation when neither chunk direction can win)
+    tabu_epochs: int = 4
+
+
+class SliderController:
+    def __init__(self, cfg: Optional[ControllerConfig] = None):
+        self.cfg = cfg or ControllerConfig()
+        self.loop = None
+        self.moves: List[dict] = []      # chunk retunes + role flips
+        self._next_epoch: Optional[float] = None
+        self._hold_until = 0.0
+        self._pending_eval: Optional[dict] = None   # last chunk move
+        self._tabu: dict = {}            # direction -> embargo-until time
+
+    # ------------------------------------------------------------------
+    def bind(self, loop):
+        self.loop = loop
+        self._next_epoch = self.cfg.epoch
+
+    @property
+    def n_moves(self) -> int:
+        return len(self.moves)
+
+    @property
+    def n_flips(self) -> int:
+        return sum(m["kind"] == "flip" for m in self.moves)
+
+    # ------------------------------------------------------------------
+    def _instances(self, itype: str) -> List:
+        return [i for i in self.loop.cluster.instances
+                if i.itype == itype and not i.draining]
+
+    def _flip_in_progress(self) -> bool:
+        return any(i.pending_flip is not None
+                   for i in self.loop.cluster.instances)
+
+    def _current_sd(self) -> int:
+        d = self._instances(D_HEAVY)
+        return min((i.chunk_size for i in d), default=0)
+
+    def _current_sp(self) -> int:
+        p = self._instances(P_HEAVY)
+        return max((i.chunk_size for i in p), default=0)
+
+    def _record(self, now: float, kind: str, **detail):
+        self.moves.append({"t": round(now, 3), "kind": kind, **detail})
+        self._hold_until = now + self.cfg.cooldown * self.cfg.epoch
+
+    # ------------------------------------------------------------------
+    def maybe_epoch(self, now: float):
+        if self._next_epoch is None or now < self._next_epoch:
+            return
+        # one decision per elapsed epoch boundary, not per backlogged one
+        self._next_epoch = (now - now % self.cfg.epoch) + self.cfg.epoch
+        self.on_epoch(now)
+
+    def on_epoch(self, now: float):
+        tele = self.loop.telemetry
+        att_ttft = tele.ttft_attainment(now)
+        # TPOT: prefer the in-flight signal — finished-request TPOT lags
+        # a whole generation behind (it reports violations long after
+        # they began, and keeps reporting them long after a fix lands);
+        # the in-flight view tracks the population actually decoding now
+        att_live = tele.tpot_inflight_attainment(
+            now, self.loop.cluster.instances)
+        att_tpot = (att_live if att_live is not None
+                    else tele.tpot_attainment(now))
+        low = self.cfg.target - self.cfg.deadband
+        ttft_bad = att_ttft is not None and att_ttft < low
+        tpot_bad = att_tpot is not None and att_tpot < low
+        self._evaluate_last_move(now, ttft_bad, tpot_bad)
+        if now < self._hold_until or self._flip_in_progress():
+            return
+        n_evidence = len(tele._first) + len(tele._fin)
+        if n_evidence < self.cfg.min_evidence:
+            return
+        if ttft_bad and tpot_bad:
+            # saturated on both axes: sliders cannot conjure capacity
+            return
+        if ttft_bad:
+            self._more_prefill(now, att_ttft)
+        elif tpot_bad:
+            self._more_decode(now, att_tpot)
+
+    def _evaluate_last_move(self, now: float, ttft_bad: bool,
+                            tpot_bad: bool):
+        """Local-search backtracking: a chunk move that broke the OTHER
+        dimension is undone and its direction embargoed, so the next
+        starved epoch escalates to a role flip instead of oscillating."""
+        mv = self._pending_eval
+        self._pending_eval = None
+        if mv is None:
+            return
+        broke_other = (tpot_bad if mv["dir"] == "up" else ttft_bad)
+        if not broke_other:
+            return
+        self.loop.set_chunks(D_HEAVY, mv["frm"])
+        until = now + self.cfg.tabu_epochs * self.cfg.epoch
+        self._tabu["sd_" + mv["dir"]] = until
+        self._record(now, "revert", slider="s_d", frm=mv["to"],
+                     to=mv["frm"],
+                     why=("tpot broke" if mv["dir"] == "up"
+                          else "ttft broke"))
+
+    def _tabued(self, direction: str, now: float) -> bool:
+        return now < self._tabu.get("sd_" + direction, 0.0)
+
+    # ------------------------------------------------------------------
+    def _more_prefill(self, now: float, att: float):
+        """Aggregation-ward: S_D up while decode has headroom, else flip
+        D->P (drain-and-flip)."""
+        cfg = self.cfg
+        sd = self._current_sd()
+        sp = self._current_sp()
+        higher = [s for s in cfg.sd_steps if s > sd]
+        tele = self.loop.telemetry
+        p90 = tele.p90_tpot_inflight(now, self.loop.cluster.instances)
+        if p90 is None:
+            p90 = tele.p90_tpot(now)
+        tpot_headroom = (p90 is None
+                         or p90 < cfg.tpot_guard * self.loop.slo.tpot)
+        higher = [s for s in higher if not sp or s <= sp]
+        if higher and tpot_headroom and not self._tabued("up", now):
+            # cratered TTFT jumps the ladder (mirror of _more_decode)
+            to = higher[-1] if att < cfg.target / 2 else higher[0]
+            if self.loop.set_chunks(D_HEAVY, to):
+                self._record(now, "chunk", slider="s_d", frm=sd,
+                             to=to, why=f"ttft_att={att:.2f}")
+                self._pending_eval = {"dir": "up", "frm": sd, "to": to}
+                return
+        d = self._instances(D_HEAVY)
+        if len(d) > cfg.min_d:
+            inst = min(d, key=lambda i: i.decode_load())
+            if self.loop.flip_role(inst, P_HEAVY, sp or max(cfg.sd_steps)):
+                self._record(now, "flip", iid=inst.iid, to=P_HEAVY,
+                             why=f"ttft_att={att:.2f}")
+
+    def _more_decode(self, now: float, att: float):
+        """Disaggregation-ward: S_D down, then P->D flip.  A cratered
+        signal (att < 1/2 target) jumps straight to the ladder floor —
+        stepping down one notch per epoch pays the violation bill for
+        every epoch the descent takes."""
+        cfg = self.cfg
+        sd = self._current_sd()
+        lower = [s for s in cfg.sd_steps if s < sd]
+        if lower and not self._tabued("down", now):
+            to = lower[0] if att < cfg.target / 2 else lower[-1]
+            if self.loop.set_chunks(D_HEAVY, to):
+                self._record(now, "chunk", slider="s_d", frm=sd,
+                             to=to, why=f"tpot_att={att:.2f}")
+                self._pending_eval = {"dir": "down", "frm": sd,
+                                      "to": to}
+                return
+        p = self._instances(P_HEAVY)
+        if len(p) > cfg.min_p:
+            inst = min(p, key=lambda i: i.decode_load())
+            # floor at the smallest ladder step: chunk 0 would strand
+            # whatever prefill work is already queued on the instance
+            new_sd = self._current_sd() or min(cfg.sd_steps)
+            if self.loop.flip_role(inst, D_HEAVY, new_sd):
+                self._record(now, "flip", iid=inst.iid, to=D_HEAVY,
+                             why=f"tpot_att={att:.2f}")

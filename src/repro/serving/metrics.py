@@ -1,0 +1,202 @@
+"""Sliding-window serving telemetry.
+
+The adaptive controller (and any operator dashboard) needs *recent*
+attainment, not lifetime averages: a run that starts prompt-heavy and
+turns decode-heavy looks fine on cumulative TTFT long after its TPOT has
+collapsed.  ``TelemetryWindow`` keeps the last ``window`` seconds of
+first-token / per-token / finish / reject events in deques and computes
+windowed TTFT/TPOT attainment, latency percentiles, goodput, and
+throughput on demand; ``snapshot`` additionally samples instance gauges
+(queue depths, decode population, HBM utilization, prefill-on-decode
+interference, cache hit rate).
+
+``MetricsLog`` accumulates snapshots for JSON export (the controller
+bench and ``--engine live`` write these to disk).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.latency import SLO
+from repro.engine.request import Request
+
+#: how many trailing interference_log entries feed the per-instance gauge
+INTERFERENCE_TAIL = 64
+
+
+class TelemetryWindow:
+    def __init__(self, slo: SLO, window: float = 10.0):
+        self.slo = slo
+        self.window = window
+        self._first: deque = deque()     # (t, ttft)
+        self._tokens: deque = deque()    # (t,)
+        self._fin: deque = deque()       # (t, tpot | None, slo_ok)
+        self._rej: deque = deque()       # (t,)
+        # lifetime counters
+        self.total_first = 0
+        self.total_tokens = 0
+        self.total_finished = 0
+        self.total_ok = 0
+        self.total_rejected = 0
+
+    # ------------------------------------------------------------------
+    # event ingestion (wired to Instance.token_sink / Cluster callbacks)
+    # ------------------------------------------------------------------
+    def on_token(self, req: Request, t: float):
+        self._tokens.append((t,))
+        self.total_tokens += 1
+        if req.output_len == 1:          # this token WAS the first token
+            self._first.append((t, req.ttft()))
+            self.total_first += 1
+
+    def on_finish(self, req: Request, t: float):
+        ok = self.slo.satisfied(req)
+        self._fin.append((t, req.tpot(), ok))
+        self.total_finished += 1
+        self.total_ok += int(ok)
+
+    def on_reject(self, req: Request, t: float):
+        self._rej.append((t,))
+        self.total_rejected += 1
+
+    def _trim(self, now: float):
+        cut = now - self.window
+        for dq in (self._first, self._tokens, self._fin, self._rej):
+            while dq and dq[0][0] < cut:
+                dq.popleft()
+
+    # ------------------------------------------------------------------
+    # windowed statistics
+    # ------------------------------------------------------------------
+    def ttft_attainment(self, now: float) -> Optional[float]:
+        """Share of windowed first tokens inside the TTFT SLO (None when
+        the window saw no first tokens — the controller treats that as
+        'no evidence', not 'perfect')."""
+        self._trim(now)
+        if not self._first:
+            return None
+        return sum(v <= self.slo.ttft for _, v in self._first) \
+            / len(self._first)
+
+    def tpot_attainment(self, now: float) -> Optional[float]:
+        self._trim(now)
+        if not self._fin:
+            return None
+        return sum(tp is None or tp <= self.slo.tpot
+                   for _, tp, _ in self._fin) / len(self._fin)
+
+    def goodput(self, now: float) -> float:
+        """SLO-attained finishes per second over the window."""
+        self._trim(now)
+        span = min(self.window, now) or 1.0
+        return sum(ok for _, _, ok in self._fin) / span
+
+    def tpot_inflight_attainment(self, now: float,
+                                 instances: Sequence) -> Optional[float]:
+        """Share of currently-decoding requests whose TPOT *since their
+        last reset* is inside the SLO.  Finished-request TPOT lags by a
+        whole generation (several seconds); this is the controller's
+        early-warning signal — it moves the moment a decode population
+        starts slipping, not after it has already failed."""
+        vals = []
+        for inst in instances:
+            for r in inst.decoding.values():
+                tp = r.current_tpot(now)
+                if tp is not None:
+                    vals.append(tp)
+        if not vals:
+            return None
+        return sum(v <= self.slo.tpot for v in vals) / len(vals)
+
+    def p90_tpot_inflight(self, now: float,
+                          instances: Sequence) -> Optional[float]:
+        vals = [tp for inst in instances
+                for r in inst.decoding.values()
+                if (tp := r.current_tpot(now)) is not None]
+        return float(np.percentile(vals, 90)) if vals else None
+
+    def p90_ttft(self, now: float) -> Optional[float]:
+        self._trim(now)
+        if not self._first:
+            return None
+        return float(np.percentile([v for _, v in self._first], 90))
+
+    def p90_tpot(self, now: float) -> Optional[float]:
+        self._trim(now)
+        xs = [tp for _, tp, _ in self._fin if tp is not None]
+        return float(np.percentile(xs, 90)) if xs else None
+
+    # ------------------------------------------------------------------
+    def snapshot(self, now: float,
+                 instances: Sequence = ()) -> dict:
+        self._trim(now)
+        span = min(self.window, now) or 1.0
+        snap = {
+            "t": round(now, 3),
+            "window_s": self.window,
+            "ttft_attainment": self.ttft_attainment(now),
+            "tpot_attainment": self.tpot_attainment(now),
+            "p90_ttft_s": self.p90_ttft(now),
+            "p90_tpot_s": self.p90_tpot(now),
+            "goodput_rps": round(self.goodput(now), 4),
+            "throughput_tok_s": round(len(self._tokens) / span, 2),
+            "rejected_in_window": len(self._rej),
+            "finished_total": self.total_finished,
+            "slo_ok_total": self.total_ok,
+            "rejected_total": self.total_rejected,
+        }
+        if instances:
+            lookups = sum(i.cache_lookups for i in instances)
+            hits = sum(i.cache_hits for i in instances)
+            snap["cache_hit_rate"] = (hits / lookups) if lookups else 0.0
+            snap["tpot_inflight_attainment"] = \
+                self.tpot_inflight_attainment(now, instances)
+            snap["instances"] = [self._instance_gauges(i)
+                                 for i in instances]
+        return snap
+
+    @staticmethod
+    def _instance_gauges(inst) -> dict:
+        tail = inst.interference_log[-INTERFERENCE_TAIL:]
+        mixed = [p for p, d in tail if d > 0]
+        return {
+            "iid": inst.iid,
+            "itype": inst.itype,
+            "chunk": inst.chunk_size,
+            "draining": inst.draining,
+            "queued_prefills": len(inst.prefill_queue),
+            "queued_prefill_tokens": inst.queued_prefill_tokens(),
+            "decoding": len(inst.decoding),
+            "pending_decode": len(inst.pending_decode),
+            "hbm_util": round(inst.hbm_utilization(), 4),
+            # mean prefill tokens co-batched per decode-carrying
+            # iteration — the interference the controller trades against
+            # prefill capacity
+            "interference": (float(np.mean(mixed)) if mixed else 0.0),
+        }
+
+
+@dataclasses.dataclass
+class MetricsLog:
+    """Snapshot accumulator with JSON export."""
+    snapshots: List[dict] = dataclasses.field(default_factory=list)
+    events: List[dict] = dataclasses.field(default_factory=list)
+
+    def record(self, snap: dict):
+        self.snapshots.append(snap)
+
+    def record_event(self, t: float, kind: str, detail: Dict):
+        self.events.append({"t": round(t, 3), "kind": kind, **detail})
+
+    def to_json(self) -> str:
+        return json.dumps({"snapshots": self.snapshots,
+                           "events": self.events}, indent=2)
+
+    def dump(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())

@@ -1,0 +1,262 @@
+"""Online serving loop: continuous ingestion, streaming, adaptation.
+
+``Cluster.run`` replays a pre-materialized request list and returns when
+the heap drains — fine for goodput sweeps, useless for serving.
+``ServingLoop`` drives the same event core *incrementally*:
+
+* **open-loop ingestion** — arrivals come from an iterator (e.g.
+  ``PhaseDriftSpec.iter_requests``) and are submitted one ahead of the
+  event horizon, so the trace is never materialized and the workload can
+  drift (or be generated live) while the loop runs;
+* **streaming** — every emitted token fires per-request and global
+  callbacks (``Instance.token_sink``), and each submitted request gets a
+  ``RequestHandle`` future that resolves at finish/rejection;
+* **telemetry** — token/finish/reject events feed a
+  ``TelemetryWindow`` (windowed attainment, goodput, gauges), with
+  periodic snapshots accumulated in a ``MetricsLog``;
+* **adaptation** — an attached ``SliderController`` observes windowed
+  headroom at epoch boundaries and retunes chunk sizes or stages
+  drain-and-flip role changes through the cluster's migration machinery.
+
+The loop is executor-agnostic: with ``SimExecutor`` it is a
+deterministic virtual-clock simulation; with ``JaxExecutor`` the same
+schedule computes real tokens (``--engine live``), optionally paced to
+wall time by ``WallClock``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, Iterator, List, Optional
+
+from repro.core.cluster import ARRIVAL, Cluster
+from repro.core.instance import Instance
+from repro.core.latency import SLO, RunStats
+from repro.engine.request import Request, State
+from repro.serving.clock import VirtualClock
+from repro.serving.metrics import MetricsLog, TelemetryWindow
+
+
+class RequestHandle:
+    """Future for one submitted request: resolves when the request
+    finishes (or is rejected); streams tokens as they are emitted."""
+
+    def __init__(self, req: Request,
+                 on_token: Optional[Callable] = None):
+        self.req = req
+        self.tokens: List[tuple] = []        # (time, token_id | None)
+        self._on_token = on_token
+
+    @property
+    def done(self) -> bool:
+        return self.req.state in (State.FINISHED, State.REJECTED)
+
+    @property
+    def rejected(self) -> bool:
+        return self.req.state == State.REJECTED
+
+    def result(self) -> Request:
+        if not self.done:
+            raise RuntimeError(
+                f"request {self.req.rid} still {self.req.state.value}; "
+                "drive the loop further")
+        return self.req
+
+    def _emit(self, t: float, tok: Optional[int]):
+        self.tokens.append((t, tok))
+        if self._on_token is not None:
+            self._on_token(self.req, t, tok)
+
+
+class ServingLoop:
+    def __init__(self, cluster: Cluster, slo: SLO,
+                 arrivals: Optional[Iterable[Request]] = None,
+                 clock: Optional[VirtualClock] = None,
+                 controller=None, window: float = 10.0,
+                 on_token: Optional[Callable] = None,
+                 snapshot_every: Optional[float] = None,
+                 pace: bool = False, steal: bool = True):
+        self.cluster = cluster
+        self.slo = slo
+        self.clock = clock or VirtualClock()
+        self.telemetry = TelemetryWindow(slo, window=window)
+        self.log = MetricsLog()
+        self.controller = controller
+        self._arrivals: Optional[Iterator[Request]] = (
+            iter(arrivals) if arrivals is not None else None)
+        self._handles: Dict[int, RequestHandle] = {}
+        self.requests: List[Request] = []     # every request ever seen
+        self._global_on_token = on_token
+        self._snapshot_every = snapshot_every
+        self._next_snapshot = snapshot_every
+        self._pace = pace
+        self._steal = steal
+        for inst in cluster.instances:
+            inst.token_sink = self._token_sink
+        cluster.on_finish = self._on_finish
+        cluster.on_reject = self._on_reject
+        if controller is not None:
+            controller.bind(self)
+
+    # ------------------------------------------------------------------
+    # ingestion
+    # ------------------------------------------------------------------
+    def submit(self, req: Request,
+               on_token: Optional[Callable] = None) -> RequestHandle:
+        """Submit one request (external callers; the arrival iterator
+        feeds through here too).  Returns its streaming future.  A
+        request whose ``arrival`` lies in the loop's past (e.g. the
+        default 0.0 on a mid-run external submission) arrives NOW —
+        events never land behind the clock, and TTFT is measured from
+        the actual submission time."""
+        req.arrival = max(req.arrival, self.cluster.now)
+        handle = RequestHandle(req, on_token)
+        self._handles[req.rid] = handle
+        self.requests.append(req)
+        self.cluster.submit(req)
+        return handle
+
+    def _pump_arrival(self) -> bool:
+        """Keep exactly one not-yet-processed arrival in the event heap
+        (arrivals are nondecreasing in time, so one look-ahead preserves
+        event order while staying incremental)."""
+        if self._arrivals is None:
+            return False
+        req = next(self._arrivals, None)
+        if req is None:
+            self._arrivals = None
+            return False
+        self.submit(req)
+        return True
+
+    # ------------------------------------------------------------------
+    # event plumbing
+    # ------------------------------------------------------------------
+    def _token_sink(self, req: Request, t: float):
+        self.telemetry.on_token(req, t)
+        handle = self._handles.get(req.rid)
+        tok = req.output_tokens[-1] if req.output_tokens else None
+        if handle is not None:
+            handle._emit(t, tok)
+        if self._global_on_token is not None:
+            self._global_on_token(req, t, tok)
+
+    def _on_finish(self, req: Request, t: float):
+        self.telemetry.on_finish(req, t)
+
+    def _on_reject(self, req: Request, t: float):
+        self.telemetry.on_reject(req, t)
+
+    # ------------------------------------------------------------------
+    # control surface (used by SliderController; callable directly)
+    # ------------------------------------------------------------------
+    def flip_role(self, inst: Instance, itype: str,
+                  chunk_size: int) -> bool:
+        staged = self.cluster.request_role_flip(inst, itype, chunk_size)
+        if staged:
+            self.log.record_event(self.cluster.now, "role_flip", {
+                "iid": inst.iid, "to": itype, "chunk": chunk_size})
+        return staged
+
+    def set_chunks(self, itype: str, chunk_size: int) -> int:
+        """Retune the chunk-size slider for every ``itype`` instance
+        (instantaneous — chunk size is a per-iteration budget, so no
+        drain is needed).  Returns how many instances changed."""
+        n = 0
+        for inst in self.cluster.instances:
+            if inst.itype == itype and not inst.draining \
+                    and inst.chunk_size != chunk_size:
+                inst.chunk_size = chunk_size
+                n += 1
+                if chunk_size <= 0 and inst.prefill_queue:
+                    # a pure-decode instance can never drain its prefill
+                    # queue — hand the queued (not-yet-admitted) work
+                    # back to the router with full ARRIVAL semantics
+                    # (early rejection included)
+                    requeue = [r for r in inst.prefill_queue
+                               if not inst.allocator.holds(r.rid)]
+                    for r in requeue:
+                        inst.prefill_queue.remove(r)
+                        self.cluster.reroute(r)
+        if n:
+            self.log.record_event(self.cluster.now, "set_chunk", {
+                "itype": itype, "chunk": chunk_size, "instances": n})
+        return n
+
+    def _steal_prefill(self):
+        """Online-runtime load repair: an idle prefill-capable instance
+        pulls queued-but-unadmitted prefill work from the deepest peer
+        queue.  Routing decisions pile up behind a slow configuration
+        (e.g. the queue an instance accumulated before a slider move);
+        stealing lets spare capacity drain the backlog instead of
+        leaving it pinned to the original placement."""
+        insts = self.cluster.instances
+        idle = [i for i in insts
+                if i.chunk_size > 0 and not i.prefill_queue
+                and not i.decoding and not i.pending_decode]
+        if not idle:
+            return
+        # one queue-depth scan per call, not per thief — this runs after
+        # every event, so it must be cheap when there is nothing to do
+        depths = {i.iid: i.queued_prefill_tokens() for i in insts}
+        for thief in idle:
+            victim = max(insts, key=lambda i: depths[i.iid])
+            if depths[victim.iid] == 0 or len(victim.prefill_queue) < 2:
+                return                 # no queue anywhere worth raiding
+            # steal from the tail: the head may be mid-chunk/admitted
+            req = victim.prefill_queue[-1]
+            if victim.allocator.holds(req.rid):
+                continue
+            victim.prefill_queue.pop()
+            depths[victim.iid] -= req.prefill_remaining
+            depths[thief.iid] = req.prefill_remaining
+            thief.enqueue_prefill(req)
+            self.cluster._schedule_iter(thief, self.cluster.now)
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+    def run(self, until: Optional[float] = None,
+            max_steps: Optional[int] = None) -> int:
+        """Drive events until the system drains (arrivals exhausted and
+        all work finished), ``until`` virtual seconds, or ``max_steps``
+        events.  Returns the number of events processed; re-entrant —
+        call again to continue."""
+        steps = 0
+        if self._arrivals is not None and not self.requests:
+            self._pump_arrival()
+        while max_steps is None or steps < max_steps:
+            t = self.cluster.peek_time()
+            if t is None:
+                if not self._pump_arrival():
+                    break
+                continue
+            if until is not None and t > until:
+                break
+            if self._pace:
+                self.clock.sleep_until(t)
+            stepped = self.cluster.step()
+            if stepped is None:
+                continue
+            steps += 1
+            _, kind, _ = stepped
+            if kind == ARRIVAL:
+                self._pump_arrival()
+            elif self._steal:
+                self._steal_prefill()
+            now = self.cluster.now
+            if self.controller is not None:
+                self.controller.maybe_epoch(now)
+            if self._snapshot_every is not None \
+                    and now >= self._next_snapshot:
+                self.log.record(self.telemetry.snapshot(
+                    now, self.cluster.instances))
+                self._next_snapshot = (
+                    now - now % self._snapshot_every + self._snapshot_every)
+        return steps
+
+    # ------------------------------------------------------------------
+    def stats(self, qps: float) -> RunStats:
+        moves = (self.controller.n_moves if self.controller is not None
+                 else 0)
+        st = self.cluster.stats(self.requests, self.slo, qps)
+        st.slider_moves = moves
+        return st

@@ -15,11 +15,32 @@ ratio.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import itertools
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.engine.request import Request
+
+
+def _iter_open_loop(spec, qps: float, seed: int, max_new_tokens: int,
+                    limit: Optional[int], chunk: int) -> Iterator:
+    """Open-loop arrival stream over any spec with ``sample_requests``:
+    sample lazily in chunks, offsetting each chunk to continue where the
+    previous one ended, so a long (or unbounded when ``limit`` is None)
+    run never materializes its trace."""
+    t0, k, emitted = 0.0, 0, 0
+    while limit is None or emitted < limit:
+        batch = spec.sample_requests(chunk, qps, seed=seed + k,
+                                     max_new_tokens=max_new_tokens)
+        for r in batch:
+            r.arrival += t0
+            yield r
+            emitted += 1
+            if limit is not None and emitted >= limit:
+                return
+        t0 = batch[-1].arrival
+        k += 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +83,14 @@ class WorkloadSpec:
                     shared_prefix_len=0 if self.tokenized else None)
             for p, o, t in zip(plens, olens, arrivals)
         ]
+
+    def iter_requests(self, qps: float, seed: int = 0,
+                      max_new_tokens: int = 4096,
+                      limit: Optional[int] = None,
+                      chunk: int = 64) -> Iterator[Request]:
+        """Open-loop arrival stream for the online serving runtime."""
+        return _iter_open_loop(self, qps, seed, max_new_tokens, limit,
+                               chunk)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +160,66 @@ class MultiTurnSpec:
         reqs.sort(key=lambda r: r.arrival)
         return reqs
 
+    def iter_requests(self, qps: float, seed: int = 0,
+                      max_new_tokens: int = 4096,
+                      limit: Optional[int] = None,
+                      chunk: int = 64) -> Iterator[Request]:
+        """Open-loop stream (sessions regenerate per chunk — session
+        continuity holds within a chunk, which is what the prefix cache
+        exploits anyway)."""
+        return _iter_open_loop(self, qps, seed, max_new_tokens, limit,
+                               chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One leg of a drifting workload: draw arrivals from ``spec`` for
+    ``duration`` simulated seconds at ``qps_scale`` x the base rate."""
+    spec: object                       # WorkloadSpec | MultiTurnSpec
+    duration: float
+    qps_scale: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseDriftSpec:
+    """Traffic whose character shifts mid-run — e.g. prompt-heavy
+    (summarization burst) -> decode-heavy (generation burst) ->
+    multiturn (chat with shared prefixes).  This is the workload the
+    online slider controller exists for: a configuration frozen for any
+    single phase leaves goodput on the table in the others.
+
+    ``iter_requests`` yields requests in arrival order, one phase after
+    another, so the serving loop can ingest them open-loop without
+    materializing the full trace."""
+    name: str
+    phases: Tuple[Phase, ...]
+
+    @property
+    def total_duration(self) -> float:
+        return sum(p.duration for p in self.phases)
+
+    def iter_requests(self, qps: float, seed: int = 0,
+                      max_new_tokens: int = 4096) -> Iterator[Request]:
+        t0 = 0.0
+        for k, ph in enumerate(self.phases):
+            q = max(qps * ph.qps_scale, 1e-6)
+            # oversample, keep arrivals inside the phase window
+            n_est = max(8, int(q * ph.duration * 2) + 16)
+            for r in ph.spec.sample_requests(n_est, q, seed=seed + k,
+                                             max_new_tokens=max_new_tokens):
+                if r.arrival >= ph.duration:
+                    break
+                r.arrival += t0
+                yield r
+            t0 += ph.duration
+
+    def sample_requests(self, n: int, qps: float, seed: int = 0,
+                        max_new_tokens: int = 4096) -> List[Request]:
+        """Materialized view (capped at ``n``) for the batch harnesses;
+        the drift itself is bounded by phase durations, not ``n``."""
+        return list(itertools.islice(
+            self.iter_requests(qps, seed, max_new_tokens), n))
+
 
 def measured_prefix_share(reqs) -> float:
     """Mean fraction of prompt tokens previously emitted in the same
@@ -175,4 +264,37 @@ AGENTIC = MultiTurnSpec(
     system_prompt_len=2048, n_system_prompts=2, turns=(4, 10),
     think_time=0.5)
 
-WORKLOADS = {w.name: w for w in (SHAREGPT, ARXIV, MULTITURN, AGENTIC)}
+# Prompt-heavy: long prompts, single-token outputs (scoring /
+# classification / reranking traffic) — pure TTFT-bound load whose
+# capacity scales with how many instances take real prefill chunks
+# (aggregation-ward slider settings win).
+PROMPT_HEAVY = WorkloadSpec(
+    name="prompt_heavy",
+    prompt=LengthDist(mu=7.5, sigma=0.4, lo=1024, hi=4096),
+    output=LengthDist(mu=0.0, sigma=0.0, lo=1, hi=1),
+)
+
+# Decode-heavy: short prompts, long generations — a decode population
+# large enough that TPOT is bound by batch size and chunk interference
+# (disaggregation-ward settings win: small S_D, more D-heavy instances).
+DECODE_HEAVY = WorkloadSpec(
+    name="decode_heavy",
+    prompt=LengthDist(mu=5.7, sigma=0.35, lo=128, hi=512),
+    output=LengthDist(mu=6.1, sigma=0.3, lo=256, hi=768),
+)
+
+# The controller's canonical scenario: prompt-heavy -> decode-heavy ->
+# multiturn.  No static slider setting is right for all three phases:
+# the burst wants every instance prefilling, the decode tsunami wants
+# small chunks and a D-rich ratio, and the multiturn tail re-sends
+# growing histories (prefill pressure back up, interference still
+# fatal).  The decode-heavy leg runs at 2.5x the base rate — token
+# demand, not request rate, is what's comparable across phases.
+DRIFT = PhaseDriftSpec(
+    name="drift",
+    phases=(Phase(PROMPT_HEAVY, 24.0, qps_scale=1.4),
+            Phase(DECODE_HEAVY, 24.0, qps_scale=1.35),
+            Phase(MULTITURN, 32.0, qps_scale=1.1)))
+
+WORKLOADS = {w.name: w for w in (SHAREGPT, ARXIV, MULTITURN, AGENTIC,
+                                 PROMPT_HEAVY, DECODE_HEAVY, DRIFT)}

@@ -1,0 +1,152 @@
+"""Cross-format migration guards and preemption-by-recompute on the
+real tensor paths.
+
+Dense<->paged cross-migration is unsupported (states are
+format-homogeneous); ``insert_state`` must fail with a
+``MigrationFormatError`` that names BOTH formats instead of a KeyError
+deep in the landing code.  Preemption-by-recompute re-prefills via the
+negative-``prefill_pos`` semantics inherited from the sim; the slow
+tests assert greedy-token parity with an unpreempted run on both the
+paged and dense engines (ROADMAP flagged this untested beyond the
+sim)."""
+import pytest
+
+jax = pytest.importorskip("jax")
+
+import numpy as np                                            # noqa: E402
+
+from repro.configs import reduced_config                      # noqa: E402
+from repro.core.estimator import CostModel                    # noqa: E402
+from repro.core.hw import InstanceSpec                        # noqa: E402
+from repro.core.instance import D_HEAVY, Instance             # noqa: E402
+from repro.engine.engine import (JaxExecutor,                 # noqa: E402
+                                 MigrationFormatError)
+from repro.engine.request import Request, State               # noqa: E402
+from repro.models import transformer as tf                    # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cost = CostModel(cfg, InstanceSpec(tp=1))
+    return cfg, params, cost
+
+
+# ---------------------------------------------------------------------------
+# MigrationFormatError: clear failure on dense<->paged cross-migration
+# ---------------------------------------------------------------------------
+
+def test_dense_state_into_paged_executor_raises(setup):
+    cfg, params, _ = setup
+    dst = JaxExecutor(cfg, params, n_slots=2, max_seq=64, paged=True)
+    req = Request(prompt_len=8, max_new_tokens=4,
+                  prompt_tokens=list(range(1, 9)))
+    dense_state = {"row": object(), "pos": 8, "last_token": 3}
+    with pytest.raises(MigrationFormatError) as ei:
+        dst.insert_state(req, dense_state)
+    msg = str(ei.value)
+    assert "dense" in msg and "paged" in msg
+    assert "like engines" in msg
+
+
+def test_paged_state_into_dense_executor_raises(setup):
+    cfg, params, _ = setup
+    dst = JaxExecutor(cfg, params, n_slots=2, max_seq=64, paged=False)
+    req = Request(prompt_len=8, max_new_tokens=4,
+                  prompt_tokens=list(range(1, 9)))
+    paged_state = {"paged_blocks": object(), "n_blocks": 1, "pos": 8,
+                   "last_token": 3, "prompt_tokens": list(range(1, 9))}
+    with pytest.raises(MigrationFormatError) as ei:
+        dst.insert_state(req, paged_state)
+    msg = str(ei.value)
+    assert "dense" in msg and "paged" in msg
+
+
+def test_format_error_is_a_value_error(setup):
+    # callers that caught ValueError for the old message keep working
+    assert issubclass(MigrationFormatError, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# preemption-by-recompute parity on the tensor paths (slow)
+# ---------------------------------------------------------------------------
+
+def _generate(cfg, params, cost, prompts, n_out, *, paged, batched=True,
+              preempt_after=None, chunk=32):
+    ex = JaxExecutor(cfg, params, n_slots=len(prompts) + 1, max_seq=256,
+                     batched=batched, paged=paged, t_buckets=(8, 16, 32))
+    inst = Instance(0, D_HEAVY, chunk, cost, ex, hbm_blocks=512)
+    reqs = [Request(prompt_len=len(p), max_new_tokens=n_out,
+                    hidden_output_len=n_out, prompt_tokens=list(p))
+            for p in prompts]
+    for r in reqs:
+        inst.enqueue_prefill(r)
+    preempted = False
+    now, guard = 0.0, 0
+    while not all(r.done() for r in reqs) and guard < 400:
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        guard += 1
+        for r in done:
+            inst.admit_decode(r)
+        if preempt_after is not None and not preempted:
+            victim = reqs[0]
+            if victim.rid in inst.decoding \
+                    and victim.output_len >= preempt_after:
+                inst._preempt(victim)
+                preempted = True
+                assert victim.prefill_pos < 0
+                assert victim.recompute_offset == victim.output_len
+    assert all(r.done() for r in reqs)
+    if preempt_after is not None:
+        assert preempted, "the victim never reached the preemption point"
+        assert inst.preemptions == 0, "test preempts manually, not OOM"
+    return [r.output_tokens for r in reqs]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("paged", [True, False],
+                         ids=["paged", "dense-packed"])
+def test_preempt_mid_decode_token_parity(setup, paged):
+    cfg, params, cost = setup
+    rng = np.random.default_rng(0)
+    prompts = [[int(x) for x in rng.integers(1, cfg.vocab_size, size=n)]
+               for n in (23, 41)]
+    base = _generate(cfg, params, cost, prompts, 16, paged=paged)
+    pre = _generate(cfg, params, cost, prompts, 16, paged=paged,
+                    preempt_after=6)
+    assert pre == base, (
+        "preemption-by-recompute must be greedy-token-exact vs. the "
+        "unpreempted run")
+
+
+@pytest.mark.slow
+def test_preempt_twice_token_parity(setup):
+    """A second preemption after the first recompute completes must
+    still recover the exact stream (recompute_offset is re-derived)."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(1)
+    prompts = [[int(x) for x in rng.integers(1, cfg.vocab_size, size=31)]]
+    base = _generate(cfg, params, cost, prompts, 18, paged=True)
+
+    ex = JaxExecutor(cfg, params, n_slots=2, max_seq=256, paged=True,
+                     t_buckets=(8, 16, 32))
+    inst = Instance(0, D_HEAVY, 32, cost, ex, hbm_blocks=512)
+    req = Request(prompt_len=31, max_new_tokens=18, hidden_output_len=18,
+                  prompt_tokens=list(prompts[0]))
+    inst.enqueue_prefill(req)
+    hits = []
+    now, guard = 0.0, 0
+    while not req.done() and guard < 500:
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        guard += 1
+        for r in done:
+            inst.admit_decode(r)
+        if req.rid in inst.decoding and req.output_len in (5, 11) \
+                and req.output_len not in hits:
+            hits.append(req.output_len)
+            inst._preempt(req)
+    assert req.done() and len(hits) == 2
+    assert req.output_tokens == base[0]

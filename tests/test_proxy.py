@@ -120,3 +120,65 @@ def test_early_rejection_inactive_when_feasible(cost):
                   early_rejection=True)
     assert proxy.schedule_prefill(req(), now=0.0) is not None
     assert proxy.rejected_count == 0 and proxy.infeasible_count == 0
+
+
+# ---------------------------------------------------------------------------
+# destination-aware transfer term: the P-heavy T charge is computed
+# against the best decode-placement candidate's cached prefix
+# ---------------------------------------------------------------------------
+
+def _pool_with_cached_d(cost, tokens):
+    """2 P-heavy + 2 D-heavy; one D-heavy holds ``tokens`` in its
+    prefix cache (committed, refcount released)."""
+    from repro.cache.prefix_cache import PrefixCache
+    insts = make_pool(cost)
+    pc = PrefixCache(4096, 16)
+    assert pc.acquire(999, tokens, 0, len(tokens) + 16)
+    pc.commit(999, tokens)
+    pc.release(999)
+    holder = insts[2]                       # a D-heavy instance
+    holder.prefix_cache = pc
+    return insts, holder
+
+
+def test_transfer_charge_shrinks_with_destination_prefix(cost):
+    tokens = list(range(1, 1025))
+    insts, holder = _pool_with_cached_d(cost, tokens)
+    proxy = Proxy(insts, cost, ttft_slo=1e9)
+    r_hit = Request(prompt_len=1024, max_new_tokens=8,
+                    prompt_tokens=list(tokens))
+    r_miss = Request(prompt_len=1024, max_new_tokens=8,
+                     prompt_tokens=[7] * 1024)
+    p_inst = insts[0]
+    t_hit = proxy._transfer_time(p_inst, r_hit)
+    t_miss = proxy._transfer_time(p_inst, r_miss)
+    assert t_miss == cost.transfer_time(1024)
+    assert t_hit < t_miss, \
+        "a cached prefix on the decode destination must shrink T"
+    cached = holder.peek_migration_prefix(r_hit)
+    assert cached > 0
+    assert t_hit == cost.transfer_time(1024 - cached)
+
+
+def test_transfer_charge_tracks_least_loaded_candidate(cost):
+    tokens = list(range(1, 1025))
+    insts, holder = _pool_with_cached_d(cost, tokens)
+    proxy = Proxy(insts, cost, ttft_slo=1e9)
+    r = Request(prompt_len=1024, max_new_tokens=8,
+                prompt_tokens=list(tokens))
+    # make the holder the more loaded D candidate: the OTHER D-heavy is
+    # now the placement choice, and it caches nothing -> full charge
+    holder.allocator.allocate(1, 64 * 16)
+    assert proxy._transfer_time(insts[0], r) == cost.transfer_time(1024)
+    # draining excludes a candidate entirely
+    other_d = insts[3]
+    other_d.draining = True
+    assert proxy._transfer_time(insts[0], r) == \
+        cost.transfer_time(1024 - holder.peek_migration_prefix(r))
+
+
+def test_transfer_charge_zero_for_d_heavy_placement(cost):
+    insts = make_pool(cost)
+    proxy = Proxy(insts, cost, ttft_slo=1e9)
+    r = Request(prompt_len=512, max_new_tokens=8)
+    assert proxy._transfer_time(insts[2], r) == 0.0
