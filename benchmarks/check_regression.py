@@ -1,0 +1,80 @@
+"""Slow-CI regression gate over the engine benchmark trajectory.
+
+Compares a fresh ``benchmarks/out/engine_bench.json`` against the
+committed baseline in ``benchmarks/baselines/engine_bench.json`` and
+fails (exit 1) when
+
+  * any variant's decode steps/s drops more than ``REPRO_BENCH_TOL``
+    (default 20%) below the baseline, or
+  * the K-step decode-horizon speedup ``horizon_decode_x`` falls below
+    the 1.5x acceptance floor.
+
+Absolute tokens/s numbers vary with the runner, so the tolerance is
+deliberately loose — this gate catches trajectory regressions (a path
+getting structurally slower), not machine jitter.  Regenerate the
+baseline with::
+
+    PYTHONPATH=src:. python benchmarks/engine_bench.py
+    cp benchmarks/out/engine_bench.json benchmarks/baselines/
+
+Usage:  python benchmarks/check_regression.py [--fresh path] [--baseline path]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+HORIZON_FLOOR = 1.5
+
+
+def check(fresh_path: str, baseline_path: str, tol: float) -> int:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    failures = []
+    for name, b in base["tokens_per_s"].items():
+        fv = fresh["tokens_per_s"].get(name)
+        if fv is None:
+            failures.append(f"variant {name!r} missing from fresh run")
+            continue
+        floor = (1.0 - tol) * b["decode_steps_per_s"]
+        got = fv["decode_steps_per_s"]
+        status = "ok" if got >= floor else "REGRESSION"
+        print(f"{name:>12}: decode {got:9.1f} steps/s "
+              f"(baseline {b['decode_steps_per_s']:.1f}, "
+              f"floor {floor:.1f}) {status}")
+        if got < floor:
+            failures.append(
+                f"{name}: decode {got:.1f} < floor {floor:.1f} "
+                f"(baseline {b['decode_steps_per_s']:.1f}, tol {tol:.0%})")
+    hx = fresh["speedup"].get("horizon_decode_x", 0.0)
+    print(f"{'horizon_x':>12}: {hx:.2f} (floor {HORIZON_FLOOR})")
+    if hx < HORIZON_FLOOR:
+        failures.append(
+            f"horizon_decode_x {hx:.2f} < acceptance floor {HORIZON_FLOOR}")
+    if failures:
+        print("\nFAIL:\n  " + "\n  ".join(failures))
+        return 1
+    print("\nOK: no decode regression vs baseline")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh",
+                    default=os.path.join(HERE, "out", "engine_bench.json"))
+    ap.add_argument("--baseline",
+                    default=os.path.join(HERE, "baselines",
+                                         "engine_bench.json"))
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("REPRO_BENCH_TOL", "0.20")))
+    args = ap.parse_args()
+    sys.exit(check(args.fresh, args.baseline, args.tol))
+
+
+if __name__ == "__main__":
+    main()

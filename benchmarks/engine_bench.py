@@ -1,17 +1,20 @@
-"""Engine executor benchmark: paged fused mixed-batch path vs. batched
-dense path vs. row-wise reference.
+"""Engine executor benchmark: paged fused mixed-batch path (K=1 and
+K=8 decode horizon) vs. batched dense path vs. row-wise reference.
 
 Measures, on a reduced CPU config (so it runs anywhere; the same jit
 variants lower for the TPU meshes):
 
   * prefill tokens/s — N requests with uneven prompt lengths, chunked
     prefill, no decode mixed in;
-  * decode steps/s — full decode batch iterations after all prefills;
+  * decode steps/s — decode-batch iterations after all prefills, until
+    every variant has generated the same number of tokens (the K=8
+    horizon variant fuses 8 steps per jit call and reads back once per
+    horizon, so its host overhead per token is ~1/8 of the K=1 path's);
   * peak KV-cache bytes — dense paths reserve ``n_slots x max_seq``
     rows; the paged pool is sized to the workload's actual contexts
     (same slot count), which is where the paged memory win shows up.
 
-Both executors are warmed up on an identical workload first so compile
+All executors are warmed up on an identical workload first so compile
 time is excluded; the comparison is steady-state dispatch + execution.
 
 Usage:  PYTHONPATH=src python benchmarks/engine_bench.py [--model smollm-135m]
@@ -37,9 +40,10 @@ N_REQS = 8
 CHUNK = 256
 MAX_SEQ = 512
 BLOCK = 16
-DECODE_ITERS = 32
+DECODE_STEPS = 32            # tokens generated per request per pass
+HORIZON = 8                  # fused steps for the horizon variant
 # paged pool: half the dense token capacity at the SAME slot count —
-# contexts here peak around 225 tokens (prompt + decode + headroom), so
+# contexts here peak around 185 tokens (prompt + decode + headroom), so
 # 2048 pooled tokens hold all 8 requests with room to spare while the
 # dense paths reserve 8 x 512 = 4096
 PAGED_BLOCKS = N_REQS * MAX_SEQ // (2 * BLOCK)
@@ -47,10 +51,15 @@ PAGED_BLOCKS = N_REQS * MAX_SEQ // (2 * BLOCK)
 # length diversity, so the timed "fresh" pass uses lengths the executor
 # has never seen — the row-wise path recompiles per distinct chunk
 # length, the batched/paged paths hit their warm bucketed shapes.
-LEN_RANGE = (40, 161)
+# Kept short enough that every decode frontier stays within one 8-block
+# table bucket: the decode phase then isolates per-iteration host +
+# dispatch overhead (what the K-step horizon removes) instead of the
+# CPU-only jnp gather cost that ROADMAP already flags as the interpret
+# path's known bottleneck.
+LEN_RANGE = (24, 81)
 
 
-def _make_requests(cfg, rng, n_out=DECODE_ITERS + 8):
+def _make_requests(cfg, rng, n_out=DECODE_STEPS + 8):
     reqs = []
     for n in rng.integers(*LEN_RANGE, size=N_REQS):
         p = list(rng.integers(1, cfg.vocab_size, size=n))
@@ -62,7 +71,9 @@ def _make_requests(cfg, rng, n_out=DECODE_ITERS + 8):
 def _run_phases(inst, ex, cfg, seed: int):
     """One workload pass on an existing instance (so jit caches persist
     across the warmup and timed passes).  Returns (prefill_s,
-    prefill_tokens, decode_s, decode_steps)."""
+    prefill_tokens, decode_s, decode_steps, decode_readbacks).  The
+    decode phase runs to a fixed TOKEN count so K=1 and K=8 variants do
+    identical work; readbacks are counted over that phase alone."""
     rng = np.random.default_rng(seed)
     reqs = _make_requests(cfg, rng)
     for r in reqs:
@@ -81,21 +92,30 @@ def _run_phases(inst, ex, cfg, seed: int):
 
     for r in reqs:
         inst.admit_decode(r)
+    target = DECODE_STEPS * len(reqs)
+    base, guard = inst.decode_token_count, 0
+    rb0 = ex.host_readbacks
     t0 = time.perf_counter()
-    for _ in range(DECODE_ITERS):
-        inst.run_iteration(now)
+    while inst.decode_token_count - base < target and guard < 1000:
+        dur, _, _ = inst.run_iteration(now)
+        now += dur
+        guard += 1
     ex.sync()
     decode_s = time.perf_counter() - t0
+    decode_steps = inst.decode_token_count - base
+    decode_readbacks = ex.host_readbacks - rb0
     for r in reqs:                      # free slots/blocks for the next pass
         inst.remove_request(r)
-    return prefill_s, prefill_tokens, decode_s, DECODE_ITERS * len(reqs)
+    return prefill_s, prefill_tokens, decode_s, decode_steps, \
+        decode_readbacks
 
 
 VARIANTS = (
-    # name, batched, paged, hbm_blocks (paged pool size)
-    ("rowwise", False, False, None),
-    ("batched", True, False, None),
-    ("paged", True, True, PAGED_BLOCKS),
+    # name, batched, paged, hbm_blocks (paged pool size), max_horizon
+    ("rowwise", False, False, None, 1),
+    ("batched", True, False, None, 1),
+    ("paged", True, True, PAGED_BLOCKS, 1),
+    (f"paged-h{HORIZON}", True, True, PAGED_BLOCKS, HORIZON),
 )
 
 
@@ -105,52 +125,60 @@ def run(model: str = "smollm-135m"):
     cost = CostModel(cfg, InstanceSpec(tp=1))
     results = {}
     cache_bytes = {}
-    for name, batched, paged, blocks in VARIANTS:
+    readbacks = {}
+    for name, batched, paged, blocks, horizon in VARIANTS:
         ex = JaxExecutor(cfg, params, n_slots=N_REQS, max_seq=MAX_SEQ,
                          batched=batched, paged=paged, hbm_blocks=blocks,
                          cache_block_size=BLOCK)
         inst = Instance(0, D_HEAVY, CHUNK, cost, ex, hbm_blocks=4096,
-                        block_size=BLOCK)
+                        block_size=BLOCK, max_horizon=horizon)
         cache_bytes[name] = ex.cache_bytes()
         _run_phases(inst, ex, cfg, seed=11)           # warmup pass
         # fresh pass: unseen prompt lengths (what serving traffic does)
-        fps, fptk, _, _ = _run_phases(inst, ex, cfg, seed=12)
+        fps, fptk, _, _, _ = _run_phases(inst, ex, cfg, seed=12)
         # steady pass: same lengths again (all shapes warm on both paths)
-        ps, ptk, ds, dst = _run_phases(inst, ex, cfg, seed=12)
+        ps, ptk, ds, dst, rb = _run_phases(inst, ex, cfg, seed=12)
         results[name] = (fptk / fps, ptk / ps, dst / ds)
+        readbacks[name] = rb
         emit(f"engine.{name}.prefill_fresh", fps / fptk * 1e6,
              f"tokens_per_s={fptk / fps:.1f};model={model};chunk={CHUNK}")
         emit(f"engine.{name}.prefill_steady", ps / ptk * 1e6,
              f"tokens_per_s={ptk / ps:.1f};model={model};chunk={CHUNK}")
         emit(f"engine.{name}.decode", ds / dst * 1e6,
-             f"steps_per_s={dst / ds:.1f};model={model};batch={N_REQS}")
+             f"steps_per_s={dst / ds:.1f};model={model};batch={N_REQS};"
+             f"horizon={horizon}")
         emit(f"engine.{name}.cache_bytes", 0.0,
              f"bytes={cache_bytes[name]};slots={N_REQS};max_seq={MAX_SEQ}")
+    h = f"paged-h{HORIZON}"
     fresh_x = results["batched"][0] / results["rowwise"][0]
     steady_x = results["batched"][1] / results["rowwise"][1]
     decode_x = results["batched"][2] / results["rowwise"][2]
     paged_decode_x = results["paged"][2] / results["batched"][2]
     paged_prefill_x = results["paged"][1] / results["batched"][1]
+    horizon_decode_x = results[h][2] / results["paged"][2]
     cache_reduction_x = cache_bytes["batched"] / cache_bytes["paged"]
     emit("engine.speedup", 0.0,
          f"prefill_fresh_x={fresh_x:.2f};prefill_steady_x={steady_x:.2f};"
          f"decode_x={decode_x:.2f};paged_decode_x={paged_decode_x:.2f};"
+         f"horizon_decode_x={horizon_decode_x:.2f};"
          f"paged_cache_reduction_x={cache_reduction_x:.2f}")
     write_json("engine_bench", {
         "model": model, "chunk": CHUNK, "n_reqs": N_REQS,
         "max_seq": MAX_SEQ, "block_size": BLOCK,
-        "paged_pool_blocks": PAGED_BLOCKS,
+        "paged_pool_blocks": PAGED_BLOCKS, "horizon": HORIZON,
         "tokens_per_s": {
             name: {"prefill_fresh": round(r[0], 1),
                    "prefill_steady": round(r[1], 1),
                    "decode_steps_per_s": round(r[2], 1)}
             for name, r in results.items()},
+        "decode_readbacks": readbacks,
         "peak_cache_bytes": cache_bytes,
         "speedup": {"prefill_fresh_x": round(fresh_x, 2),
                     "prefill_steady_x": round(steady_x, 2),
                     "decode_x": round(decode_x, 2),
                     "paged_vs_batched_decode_x": round(paged_decode_x, 2),
                     "paged_vs_batched_prefill_x": round(paged_prefill_x, 2),
+                    "horizon_decode_x": round(horizon_decode_x, 2),
                     "paged_cache_reduction_x": round(cache_reduction_x, 2)},
     })
     return fresh_x, steady_x, decode_x

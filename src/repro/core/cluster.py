@@ -19,6 +19,16 @@ Role reconfiguration (drain-and-flip): ``request_role_flip`` stages a
 P-heavy<->D-heavy flip on an instance; its decode population is migrated
 away through the ordinary TRANSFER machinery (no in-flight request
 dropped) and the flip lands once the decode side is empty.
+
+Async execution (``async_exec=True``): each ITER splits into a DISPATCH
+(the instance hands the plan to its executor's non-blocking
+``step_async`` and the cluster schedules a COMMIT at the modeled end
+time) and a COMMIT (the single host readback, bookkeeping, then —
+before the host spends time streaming the tokens — the NEXT iteration
+is dispatched inline, so the device computes horizon N+1 while the host
+consumes horizon N).  Migrations, drains, and flips all run in an
+instance's commit phase, i.e. with its pipeline flushed — an eject can
+never observe a half-applied horizon.
 """
 from __future__ import annotations
 
@@ -32,11 +42,13 @@ from repro.core.latency import SLO, RunStats
 from repro.core.policies import BasePolicy
 from repro.engine.request import Request, State
 
-ARRIVAL, ITER, TRANSFER = 0, 1, 2
+ARRIVAL, ITER, TRANSFER, COMMIT = 0, 1, 2, 3
 
 
 class Cluster:
-    def __init__(self, policy: BasePolicy, cost: CostModel):
+    def __init__(self, policy: BasePolicy, cost: CostModel,
+                 async_exec: bool = False):
+        self.async_exec = async_exec
         self.policy = policy
         self.cost = cost
         self.instances = policy.instances
@@ -130,38 +142,99 @@ class Cluster:
             elif move_kind == "drain":
                 self.drain_count += 1
             self._schedule_iter(dst, now)
+        elif kind == COMMIT:
+            self._commit(self._inst_by_id[data], now)
         else:  # ITER
             inst = self._inst_by_id[data]
             self._iter_scheduled[inst.iid] = False
+            if self.async_exec \
+                    and getattr(inst.executor, "step_async", None):
+                self._dispatch(inst, now)
+                return
             dur, prefill_done, finished = inst.run_iteration(now)
             end = now + dur
             if self.on_finish is not None:
                 for req in finished:
-                    self.on_finish(req, end)
-            for req in prefill_done:
-                target, needs_transfer = self.policy.on_prefill_done(
-                    req, inst, end)
-                if needs_transfer:
-                    self._start_transfer(req, inst, target, end, "place")
-                else:
-                    target.admit_decode(req)
-                    self._schedule_iter(target, end)
-            for (req, src, dst, is_backflow) in (
-                    self.policy.select_migrations(end, inst)):
-                self._start_transfer(req, src, dst, end,
-                                     "backflow" if is_backflow
-                                     else "degrade")
-                self._schedule_iter(dst, end)
-            if inst.pending_flip is not None:
-                self._drain_step(inst, end)
+                    # a request EOSing mid-horizon finished at its last
+                    # token's per-step time, not the horizon end — same
+                    # timestamping as the async commit path
+                    self.on_finish(req, req.finish_time
+                                   if req.finish_time is not None else end)
+            self._post_iteration(inst, end, dur, prefill_done)
+
+    def _post_iteration(self, inst: Instance, end: float, dur: float,
+                        prefill_done, reschedule: bool = True):
+        """Scheduling phase shared by the synchronous ITER and the async
+        COMMIT: route finished prefills, run Algorithm 1's migration
+        selection, advance a staged drain, and (optionally) reschedule
+        the instance."""
+        for req in prefill_done:
+            target, needs_transfer = self.policy.on_prefill_done(
+                req, inst, end)
+            if needs_transfer:
+                self._start_transfer(req, inst, target, end, "place")
+            else:
+                target.admit_decode(req)
+                self._schedule_iter(target, end)
+        for (req, src, dst, is_backflow) in (
+                self.policy.select_migrations(end, inst)):
+            self._start_transfer(req, src, dst, end,
+                                 "backflow" if is_backflow
+                                 else "degrade")
+            self._schedule_iter(dst, end)
+        if inst.pending_flip is not None:
+            self._drain_step(inst, end)
+        if reschedule and inst.has_work():
+            if dur == 0.0:
+                # nothing schedulable this tick (e.g. oversized
+                # head-of-line request): back off instead of
+                # spinning at the same timestamp
+                self._schedule_iter(inst, end + 0.01)
+            else:
+                self._schedule_iter(inst, end)
+
+    # ------------------------------------------------------------------
+    # async pipeline: dispatch / commit event halves
+    # ------------------------------------------------------------------
+    def _dispatch(self, inst: Instance, now: float):
+        dur = inst.dispatch_iteration(now)
+        if dur is None:
             if inst.has_work():
-                if dur == 0.0:
-                    # nothing schedulable this tick (e.g. oversized
-                    # head-of-line request): back off instead of
-                    # spinning at the same timestamp
-                    self._schedule_iter(inst, end + 0.01)
-                else:
-                    self._schedule_iter(inst, end)
+                # nothing schedulable (oversized head-of-line): back off
+                self._schedule_iter(inst, now + 0.01)
+            return
+        # hold the scheduled flag through the flight so arrivals and
+        # transfers cannot double-dispatch; the commit rearms it
+        self._iter_scheduled[inst.iid] = True
+        self._push(now + dur, COMMIT, inst.iid)
+
+    def _commit(self, inst: Instance, now: float):
+        res = inst.commit_iteration(defer_emit=True)
+        self._iter_scheduled[inst.iid] = False
+        # scheduling first (migrations/drains run against a flushed
+        # pipeline), then dispatch the NEXT iteration inline so the
+        # device starts horizon N+1 before the host streams horizon N
+        self._post_iteration(inst, now, res.duration, res.prefill_done,
+                             reschedule=False)
+        if inst.has_work() and not self._iter_scheduled[inst.iid]:
+            if res.duration == 0.0:
+                self._schedule_iter(inst, now + 0.01)
+            else:
+                self._handle(now, ITER, inst.iid)
+        for req, t in res.token_events:
+            inst.token_sink(req, t)
+        if self.on_finish is not None:
+            for req in res.finished:
+                self.on_finish(req, req.finish_time
+                               if req.finish_time is not None else now)
+
+    # ------------------------------------------------------------------
+    def set_horizon(self, max_horizon: int):
+        """Set every instance's decode-horizon cap (1 = classic
+        single-step iterations).  Instances still shrink K adaptively —
+        this is the ceiling, not the operating point."""
+        for inst in self.instances:
+            inst.max_horizon = max_horizon
 
     # ------------------------------------------------------------------
     # drain-and-flip role reconfiguration

@@ -26,6 +26,16 @@ D_HEAVY = "D"
 class IterationPlan:
     prefill_items: List[Tuple[Request, int]]      # (request, chunk tokens)
     decode_reqs: List[Request]
+    #: fused decode steps this iteration executes (1 = classic single
+    #: step; > 1 only on decode-only plans — a co-scheduled chunked
+    #: prefill always forces K back to 1)
+    horizon: int = 1
+    #: per-row token budgets for horizon > 1 (aligned with decode_reqs):
+    #: min(horizon, remaining output, allocator-extendable growth)
+    decode_budgets: Optional[List[int]] = None
+    #: per-step modeled durations, filled by iteration_duration for
+    #: horizon > 1 so token timestamps spread exactly like K=1 events
+    step_durations: Optional[List[float]] = None
 
     @property
     def prefill_tokens(self) -> int:
@@ -39,6 +49,19 @@ class IterationPlan:
 
     def empty(self) -> bool:
         return not self.prefill_items and not self.decode_reqs
+
+
+@dataclasses.dataclass
+class CommitResult:
+    """Outcome of one committed iteration (second half of the
+    dispatch/commit split).  ``token_events`` carries the deferred
+    per-token sink calls ``(request, time)`` when the caller asked for
+    deferred emission — so it can dispatch the next horizon before the
+    host spends time streaming these."""
+    duration: float
+    prefill_done: List[Request]
+    finished: List[Request]
+    token_events: List[Tuple[Request, float]]
 
 
 class Executor(Protocol):
@@ -58,12 +81,21 @@ class Executor(Protocol):
     def release(self, req: Request): ...
 
 
+#: HBM-utilization level above which the horizon collapses to 1 — near
+#: the degradation watermark every iteration must be schedulable so
+#: Algorithm 1 can start flowing requests without a K-step lag
+HORIZON_HBM_GUARD = 0.90
+
+
 class Instance:
     def __init__(self, iid: int, itype: str, chunk_size: int,
                  cost: CostModel, executor: Executor,
                  hbm_blocks: int = 4096, block_size: int = 16,
                  max_decode_batch: int = 256,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 max_horizon: int = 1,
+                 tpot_slo: Optional[float] = None,
+                 tpot_alpha: float = 0.96):
         self.iid = iid
         self.itype = itype
         self.chunk_size = chunk_size
@@ -101,6 +133,18 @@ class Instance:
             # executor must stop self-managing the same allocator
             executor.use_external_bookkeeping()
         self.max_decode_batch = max_decode_batch
+        # multi-step decode horizon: upper bound on fused decode steps
+        # per iteration (1 = classic).  tpot_slo/tpot_alpha describe the
+        # flowing-decode budget the adaptive pick shrinks K against
+        # (wired by the policy; optional for standalone instances).
+        self.max_horizon = max_horizon
+        self.tpot_slo = tpot_slo
+        self.tpot_alpha = tpot_alpha
+        self.last_horizon = 1
+        self.horizon_peak = 1
+        # in-flight iteration (dispatch/commit split): (plan, pending
+        # executor step or None, start time, modeled duration)
+        self._inflight: Optional[tuple] = None
 
         self.prefill_queue: deque[Request] = deque()
         self.decoding: Dict[int, Request] = {}
@@ -215,13 +259,61 @@ class Instance:
             req.state = State.DECODE
             req.decode_instance = self.iid
 
-    def build_plan(self) -> IterationPlan:
+    def _pick_horizon(self, now: Optional[float] = None) -> int:
+        """How many decode steps the next iteration may fuse.
+
+        The horizon must stay *schedulable*: it collapses to 1 whenever
+        the instance has prefill work (a co-scheduled chunk must not
+        wait K steps — TTFT), is draining toward a role flip (the
+        barrier needs per-step progress), or sits near the HBM
+        watermark (degradation must be able to flow requests without a
+        K-step lag).  Otherwise K is the largest power of two within
+        ``max_horizon``, shrunk by the flowing-decode budget: as the
+        worst in-flight TPOT approaches the backflow threshold
+        ``tpot_alpha * tpot_slo``, Algorithm 1 needs finer scheduling
+        grain, so the horizon steps down before requests must flow."""
+        if self.max_horizon <= 1 or not self.decoding:
+            return 1
+        if self.prefill_queue or self.draining or self.pending_flip:
+            return 1
+        if not getattr(self.executor, "horizon_capable", True):
+            return 1
+        if self.allocator.utilization() > HORIZON_HBM_GUARD:
+            return 1
+        k = 1
+        while k * 2 <= self.max_horizon:
+            k *= 2
+        if now is not None and self.tpot_slo:
+            worst = max((r.current_tpot(now) or 0.0
+                         for r in self.decoding.values()), default=0.0)
+            frac = worst / (self.tpot_alpha * self.tpot_slo)
+            if frac >= 0.9:
+                return 1
+            if frac >= 0.75:
+                k = min(k, 2)
+            elif frac >= 0.5:
+                k = min(k, max(2, k // 2))
+        return k
+
+    def build_plan(self, now: Optional[float] = None) -> IterationPlan:
         self._try_admit_pending()
-        decode_reqs = []
+        k = self._pick_horizon(now)
+        decode_reqs: List[Request] = []
+        budgets: List[int] = []
         for req in list(self.decoding.values()):
-            if self.allocator.can_extend(req.rid, req.context_len + 1):
-                self.allocator.extend(req.rid, req.context_len + 1)
+            # per-row horizon budget: never generate past the request's
+            # remaining output, never reserve more growth than the
+            # allocator can grant — but always try at least one step
+            want = max(1, min(k, req.remaining_output))
+            grant = 0
+            for b in range(want, 0, -1):
+                if self.allocator.can_extend(req.rid, req.context_len + b):
+                    self.allocator.extend(req.rid, req.context_len + b)
+                    grant = b
+                    break
+            if grant:
                 decode_reqs.append(req)
+                budgets.append(grant)
             else:
                 self.stalled_decodes += 1
         budget = max(0, self.chunk_size - len(decode_reqs))
@@ -240,6 +332,19 @@ class Instance:
             else:
                 break
         plan = IterationPlan(items, decode_reqs)
+        if k > 1 and decode_reqs and not items:
+            # collapse to the largest power of two any row can actually
+            # use (bounds jit compile variants to the pow2 ladder); rows
+            # with smaller grants freeze early via their budget
+            h = 1
+            mb = max(budgets)
+            while h * 2 <= mb:
+                h *= 2
+            if h > 1:
+                plan.horizon = h
+                plan.decode_budgets = [min(b, h) for b in budgets]
+        self.last_horizon = plan.horizon
+        self.horizon_peak = max(self.horizon_peak, plan.horizon)
         if plan.empty() and self.decoding:
             # memory deadlock: every decode stalled on a block boundary
             # with zero free blocks.  vLLM-style preemption-by-recompute:
@@ -248,7 +353,7 @@ class Instance:
             victim = max(self.decoding.values(), key=lambda r: r.context_len)
             self._preempt(victim)
             self.preemptions += 1
-            return self.build_plan()
+            return self.build_plan(now)
         return plan
 
     def _admit_prefill(self, req: Request) -> bool:
@@ -303,20 +408,76 @@ class Instance:
         self.prefill_queue.appendleft(req)
 
     def iteration_duration(self, plan: IterationPlan) -> float:
-        return self.cost.iteration_time(
-            [(t, r.prefill_pos) for r, t in plan.prefill_items],
-            [r.context_len for r in plan.decode_reqs])
+        if plan.horizon <= 1:
+            return self.cost.iteration_time(
+                [(t, r.prefill_pos) for r, t in plan.prefill_items],
+                [r.context_len for r in plan.decode_reqs])
+        # a K-horizon models exactly the K single decode iterations it
+        # fuses: contexts grow one token per step, so the per-step
+        # durations (kept for token-timestamp spreading) sum to what a
+        # K=1 schedule would have charged over the same tokens
+        ctxs = [r.context_len for r in plan.decode_reqs]
+        plan.step_durations = [
+            self.cost.iteration_time([], [c + s for c in ctxs])
+            for s in range(plan.horizon)]
+        return sum(plan.step_durations)
 
-    def run_iteration(self, now: float) -> Tuple[float, List[Request], List[Request]]:
-        """Execute one iteration starting at ``now``.
-
-        Returns (duration, prefill_completed, decode_finished)."""
-        plan = self.build_plan()
+    # ------------------------------------------------------------------
+    # iteration execution: dispatch / commit (run_iteration = both)
+    # ------------------------------------------------------------------
+    def dispatch_iteration(self, now: float) -> Optional[float]:
+        """Build a plan and hand it to the executor WITHOUT waiting for
+        device results (``step_async`` when the executor has one).
+        Returns the modeled duration, or None when nothing is
+        schedulable; ``commit_iteration`` finishes the iteration."""
+        plan = self.build_plan(now)
         if plan.empty():
-            return 0.0, [], []
+            return None
         dur = self.iteration_duration(plan)
-        end = now + dur
-        eos = self.executor.execute(plan)
+        step_fn = getattr(self.executor, "step_async", None)
+        pending = step_fn(plan) if step_fn is not None else None
+        self._inflight = (plan, pending, now, dur)
+        self.busy_until = now + dur
+        return dur
+
+    def has_inflight(self) -> bool:
+        return self._inflight is not None
+
+    def pending_step(self):
+        """The in-flight iteration's unresolved executor step, if any —
+        the serving loop polls this to prefetch device results during
+        idle pacing gaps (keeps the inflight tuple's layout private)."""
+        if self._inflight is None:
+            return None
+        pending = self._inflight[1]
+        if pending is None or pending.resolved:
+            return None
+        return pending
+
+    def commit_iteration(self, defer_emit: bool = False) -> CommitResult:
+        """Resolve the in-flight step (the one blocking readback) and
+        apply request/latency bookkeeping.  With ``defer_emit`` the
+        per-token sink callbacks are returned instead of fired, so the
+        caller can dispatch the next horizon first and stream these
+        while the device computes (one-horizon-lagged consumption)."""
+        plan, pending, t0, dur = self._inflight
+        self._inflight = None
+        if pending is not None:
+            eos = pending.resolve()
+            emitted = pending.emitted
+        else:
+            eos = self.executor.execute(plan)
+            emitted = {}
+        end = t0 + dur
+        events: List[Tuple[Request, float]] = []
+
+        def emit(req, t):
+            if self.token_sink is None:
+                return
+            if defer_emit:
+                events.append((req, t))
+            else:
+                self.token_sink(req, t)
 
         prefill_done: List[Request] = []
         finished: List[Request] = []
@@ -334,8 +495,7 @@ class Instance:
                 # single-token scoring/classification traffic never
                 # reaches decode)
                 req.record_token(end)
-                if self.token_sink is not None:
-                    self.token_sink(req, end)
+                emit(req, end)
                 if eos.get(req.rid, False) or req.done():
                     req.state = State.FINISHED
                     req.finish_time = end
@@ -344,22 +504,48 @@ class Instance:
                 else:
                     prefill_done.append(req)
 
-        for req in plan.decode_reqs:
-            req.interference_tokens += plan.prefill_tokens
-            req.record_token(end)
-            if self.token_sink is not None:
-                self.token_sink(req, end)
-            self.decode_token_count += 1
+        K = plan.horizon
+        budgets = plan.decode_budgets or [1] * len(plan.decode_reqs)
+        counts = [emitted.get(r.rid, b)
+                  for r, b in zip(plan.decode_reqs, budgets)]
+        # spread horizon token timestamps over the modeled per-step
+        # durations, exactly where a K=1 schedule would have put them
+        # (in-flight TPOT telemetry reads per-step latency, not dur/1)
+        last_t = [end] * len(plan.decode_reqs)
+        t = t0
+        for s in range(K):
+            t = end if K == 1 else t + plan.step_durations[s]
+            for i, (req, c) in enumerate(zip(plan.decode_reqs, counts)):
+                if s >= c:
+                    continue
+                if s == 0:
+                    req.interference_tokens += plan.prefill_tokens
+                req.record_token(t)
+                emit(req, t)
+                self.decode_token_count += 1
+                last_t[i] = t
+        for i, req in enumerate(plan.decode_reqs):
             if eos.get(req.rid, False) or req.done():
                 req.state = State.FINISHED
-                req.finish_time = end
+                req.finish_time = last_t[i]
                 self.remove_request(req)
                 finished.append(req)
         self.interference_log.append(
             (plan.prefill_tokens, len(plan.decode_reqs)))
         self.iterations += 1
         self.busy_until = end
-        return dur, prefill_done, finished
+        return CommitResult(dur, prefill_done, finished, events)
+
+    def run_iteration(self, now: float) -> Tuple[float, List[Request], List[Request]]:
+        """Execute one iteration starting at ``now`` (synchronous:
+        dispatch + commit back-to-back).
+
+        Returns (duration, prefill_completed, decode_finished)."""
+        dur = self.dispatch_iteration(now)
+        if dur is None:
+            return 0.0, [], []
+        res = self.commit_iteration()
+        return res.duration, res.prefill_done, res.finished
 
     # ------------------------------------------------------------------
     # migration support (flowing decode)

@@ -47,6 +47,11 @@ class BasePolicy:
         self.ttft_slo = ttft_slo
         self.tpot_slo = tpot_slo
         self.proxy = Proxy(self.instances, cost, ttft_slo, seed=seed)
+        # adaptive decode-horizon selection reads the flowing-decode
+        # budget: give every instance the TPOT SLO it is serving against
+        for inst in self.instances:
+            if inst.tpot_slo is None:
+                inst.tpot_slo = tpot_slo
 
     @property
     def p_instances(self) -> List[Instance]:
@@ -125,6 +130,8 @@ class TaiChiPolicy(BasePolicy):
         routing awareness while keeping KV reuse itself on."""
         super().__init__(instances, cost, ttft_slo, tpot_slo, seed=seed)
         self.sliders = sliders
+        for inst in self.instances:
+            inst.tpot_alpha = sliders.alpha
         self.enable_flowing = enable_flowing
         self.length_aware = length_aware
         self.proxy.early_rejection = early_rejection

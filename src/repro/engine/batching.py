@@ -115,6 +115,43 @@ def pack_mixed(chunks, starts: Sequence[int], table_rows,
     return PackedMixed(tokens, start, valid, tables)
 
 
+@dataclasses.dataclass
+class PackedDecode:
+    """Host-side arrays for one K-step fused decode-horizon call over the
+    paged cache.  One row per scheduled decode request; padding rows have
+    ``budget == 0`` and an all ``-1`` table, so the on-device done-mask
+    freezes them at step 0 and every KV write they would make drops."""
+    tokens: np.ndarray      # [B] int32 last sampled token per row
+    start: np.ndarray       # [B] int32 current cache position per row
+    budget: np.ndarray      # [B] int32 tokens this row may emit (0 = pad)
+    tables: np.ndarray      # [B, NB] int32 block tables (-1 = unallocated)
+
+
+def pack_decode(last_tokens: Sequence[int], positions: Sequence[int],
+                budgets: Sequence[int], table_rows,
+                max_blocks: int, block_size: int) -> PackedDecode:
+    """Pack a decode-only horizon batch.  ``B`` buckets to the next power
+    of two and the table width ``NB`` to the smallest power of two
+    covering every row's end-of-horizon frontier ``ceil((pos + budget) /
+    block_size)`` (capped at ``max_blocks`` — positions clamp on-device
+    past ``max_seq``, so the cap is never short)."""
+    B = bucket_batch(len(last_tokens))
+    need = max(-(-(p + b) // block_size)
+               for p, b in zip(positions, budgets))
+    NB = min(bucket_batch(max(need, 1)), max_blocks)
+    tokens = np.zeros(B, np.int32)
+    start = np.zeros(B, np.int32)
+    budget = np.zeros(B, np.int32)
+    tables = np.full((B, NB), -1, np.int32)
+    for i, (tok, p, b, row) in enumerate(
+            zip(last_tokens, positions, budgets, table_rows)):
+        tokens[i] = tok
+        start[i] = p
+        budget[i] = b
+        tables[i] = row[:NB]
+    return PackedDecode(tokens, start, budget, tables)
+
+
 def pack_prefill(chunks, starts: Sequence[int], row_slots: Sequence[int],
                  n_slots: int, t_buckets: Sequence[int]) -> PackedPrefill:
     """Pack per-request prefill chunks (``chunks[i]`` = token list starting

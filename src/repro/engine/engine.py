@@ -29,6 +29,24 @@ Decode on the dense paths always runs the full slot batch (inactive
 rows are harmless — masks derive validity from each row's own position,
 and recurrent state is zeroed at slot assignment); the paged path runs
 exactly the scheduled rows.
+
+Two serving-loop-facing mechanisms sit on top of the three paths:
+
+* **multi-step decode horizon** — a decode-only iteration whose plan
+  carries ``horizon == K > 1`` executes as ONE jitted ``lax.scan`` over
+  K decode steps (paged and packed-dense paths): sampling stays on
+  device between steps, per-row done-masks freeze rows that emit EOS or
+  exhaust their per-row budget (their KV writes drop via ``valid_len``),
+  and block tables are pre-grown to the end-of-horizon frontier so the
+  in-loop write pointer advances through them.  One host sync then
+  retires up to ``K x B`` tokens.
+* **non-blocking ``step_async``** — every executor path dispatches its
+  jit calls and returns a :class:`PendingStep` immediately (JAX async
+  dispatch keeps the device busy); the single blocking ``np.asarray``
+  readback happens at ``resolve()``, so the serving loop can ingest
+  arrivals, schedule other instances, and stream the *previous*
+  horizon's tokens while this one computes.  ``execute`` remains the
+  synchronous wrapper (``step_async(plan).resolve()``).
 """
 from __future__ import annotations
 
@@ -53,6 +71,86 @@ class MigrationFormatError(ValueError):
     """A migrated engine state's KV format (dense row vs. paged blocks)
     does not match the destination executor's format.  Dense<->paged
     cross-migration is unsupported — migrate between like engines."""
+
+
+class PendingStep:
+    """An in-flight executor iteration: the jit calls are dispatched, the
+    host readback is deferred.
+
+    ``resolve()`` performs the (single) blocking host sync, applies
+    tokens/EOS to the step's requests through the executor-supplied
+    closure, and returns the eos dict — the same contract as
+    ``execute``.  ``ready()`` / ``prefetch()`` let an idle serving loop
+    materialize the device results without blocking once the device has
+    finished, so the later ``resolve()`` costs nothing.
+
+    ``emitted`` maps rid -> tokens produced this step (populated at
+    resolve; consumers fall back to the plan's per-row budgets when a
+    rid is absent)."""
+
+    def __init__(self, executor, arrays, apply_fn, horizon: int = 1):
+        self._ex = executor
+        self._arrays = tuple(arrays)
+        self._apply = apply_fn
+        self.horizon = horizon
+        self._np: Optional[list] = None
+        self.eos: Optional[Dict[int, bool]] = None
+        self.emitted: Dict[int, int] = {}
+        self.resolved = False
+
+    def ready(self) -> bool:
+        """True once every dispatched array has landed (non-blocking)."""
+        if self._np is not None:
+            return True
+        try:
+            return all(a.is_ready() for a in self._arrays)
+        except AttributeError:      # older jax: no readiness probe
+            return False
+
+    def prefetch(self):
+        """Materialize the device results on the host.  Every
+        materialization counts as a readback; it additionally counts as
+        a blocking sync unless the arrays were already ready (the
+        serving loop calls this from idle pacing gaps, where it is
+        free)."""
+        if self._np is None:
+            if self._arrays:
+                self._ex.host_readbacks += 1
+                if not self.ready():
+                    self._ex.host_syncs += 1
+            self._np = [np.asarray(a) for a in self._arrays]
+        return self._np
+
+    def resolve(self) -> Dict[int, bool]:
+        if not self.resolved:
+            arrays = self.prefetch()
+            self.eos = self._apply(arrays, self)
+            self.resolved = True
+            if self._ex is not None and self._ex._pending is self:
+                self._ex._pending = None
+        return self.eos
+
+
+class ImmediateStep:
+    """Trivial pending step for executors with nothing in flight (the
+    simulator's token oracle, empty plans)."""
+
+    horizon = 1
+
+    def __init__(self, eos: Optional[Dict[int, bool]] = None):
+        self.eos = dict(eos or {})
+        self.emitted: Dict[int, int] = {}
+        self.resolved = False
+
+    def ready(self) -> bool:
+        return True
+
+    def prefetch(self):
+        return []
+
+    def resolve(self) -> Dict[int, bool]:
+        self.resolved = True
+        return self.eos
 
 
 def _prefill_window(req: Request, start: int, take: int):
@@ -123,6 +221,16 @@ class JaxExecutor:
         self._deferred_states: dict = {}
         self.prefix_adoptions = 0
         self.prefix_copies = 0
+        # async-step pipeline state + observability (test hooks):
+        # host_readbacks counts every host<->device result
+        # materialization (the horizon acceptance bound is readbacks
+        # per generated token <= 1/K); host_syncs counts only the
+        # BLOCKING ones (device not yet done when the host asked)
+        self._pending: Optional[PendingStep] = None
+        self.host_readbacks = 0
+        self.host_syncs = 0
+        self.horizon_calls = 0
+        self.horizon_tokens = 0
         # ---- paged physical cache (default wherever paging is exact) --
         self.paged = (batched and packable(cfg) if paged is None
                       else bool(paged) and batched and packable(cfg))
@@ -256,6 +364,91 @@ class JaxExecutor:
             return _sample_on_device(logits, key), pool
 
         self._mixed_fused = _mixed_fused
+
+        # ---- rowwise-path device sampler (only token ids cross) -------
+        @jax.jit
+        def _sample_batch(logits, key):
+            return _sample_on_device(logits, key)
+
+        self._sample_batch = _sample_batch
+
+        # ---- multi-step decode horizon: K fused steps, one readback ---
+        eos_id = self.eos_id
+
+        @functools.partial(jax.jit, static_argnames=("K",),
+                           donate_argnames=("pool",))
+        def _horizon_paged(params, pool, tok0, pos0, budget, tables,
+                           key, K):
+            # One lax.scan over K decode steps: sampling feeds the next
+            # step on device, rows freeze (done-mask) once they emit EOS
+            # or exhaust their per-row budget — frozen rows' KV writes
+            # drop (valid_len == 0) and their position/token hold still,
+            # so the returned carries are exact per-row final states.
+            B = tok0.shape[0]
+
+            def body(carry, s):
+                pool, last, pos, emitted, done = carry
+                active = (~done) & (emitted < budget)
+                step = active.astype(jnp.int32)
+                p = jnp.minimum(pos, max_seq - 1)
+                hidden, pool, _ = tf.forward(
+                    params, cfg, last[:, None], p[:, None], pool,
+                    compute_logits=False, valid_len=step,
+                    block_tables=(tables, block_size))
+                logits = jnp.einsum("bd,dv->bv", hidden[:, 0],
+                                    params["lm_head"])
+                tok = _sample_on_device(logits, jax.random.fold_in(key, s))
+                tok = jnp.where(active, tok, last)
+                if eos_id is not None:
+                    done = done | (active & (tok == eos_id))
+                return (pool, tok, pos + step, emitted + step, done), tok
+
+            init = (pool, tok0, pos0, jnp.zeros_like(pos0),
+                    jnp.zeros((B,), bool))
+            (pool, last, pos, emitted, done), toks = jax.lax.scan(
+                body, init, jnp.arange(K, dtype=jnp.int32))
+            return toks, emitted, last, pos, done, pool
+
+        self._horizon_paged = _horizon_paged
+
+        @functools.partial(jax.jit, static_argnames=("K",),
+                           donate_argnames=("cache",))
+        def _horizon_dense(params, cache, tok0, pos0, budget, key, K):
+            # Packed-dense variant over the full slot batch: rows with
+            # budget 0 (unscheduled slots, padding) never write — unlike
+            # the K=1 dense decode, whose harmless-garbage writes rely
+            # on later overwrites that a K-step loop cannot guarantee.
+            B = tok0.shape[0]
+
+            def body(carry, s):
+                cache, last, pos, emitted, done = carry
+                active = (~done) & (emitted < budget)
+                step = active.astype(jnp.int32)
+                logits, cache, _ = tf.forward(
+                    params, cfg, last[:, None], pos[:, None], cache,
+                    valid_len=step)
+                tok = _sample_on_device(logits[:, -1],
+                                        jax.random.fold_in(key, s))
+                tok = jnp.where(active, tok, last)
+                if eos_id is not None:
+                    done = done | (active & (tok == eos_id))
+                return (cache, tok, pos + step, emitted + step, done), tok
+
+            init = (cache, tok0, pos0, jnp.zeros_like(pos0),
+                    jnp.zeros((B,), bool))
+            (cache, last, pos, emitted, done), toks = jax.lax.scan(
+                body, init, jnp.arange(K, dtype=jnp.int32))
+            return toks, emitted, last, pos, done, cache
+
+        self._horizon_dense = _horizon_dense
+
+    @property
+    def horizon_capable(self) -> bool:
+        """True when this executor can fuse K>1 decode steps: the paged
+        pool and the packed dense path freeze rows via ``valid_len``,
+        which needs full-cache attention everywhere (same gate as
+        T-padded packing) — other families stay at K=1."""
+        return self.paged or self.packed
 
     # ------------------------------------------------------------------
     # unified bookkeeping surface (paged mode)
@@ -475,13 +668,6 @@ class JaxExecutor:
             lambda a, r: a.at[:, slot:slot + 1].set(r),
             self.cache["segments"], row_cache["segments"])}
 
-    def _sample(self, logits_row) -> int:
-        if self.greedy:
-            return int(jnp.argmax(logits_row))
-        p = np.asarray(jax.nn.softmax(
-            logits_row.astype(jnp.float32) / self.temperature))
-        return int(self._rng.choice(len(p), p=p / p.sum()))
-
     def _next_key(self):
         key = jax.random.fold_in(self._base_key, self._step)
         self._step += 1
@@ -489,20 +675,42 @@ class JaxExecutor:
 
     # ------------------------------------------------------------------
     def execute(self, plan) -> Dict[int, bool]:
+        """Synchronous wrapper: dispatch + immediately resolve."""
+        return self.step_async(plan).resolve()
+
+    def step_async(self, plan) -> PendingStep:
+        """Dispatch one planned iteration WITHOUT waiting for device
+        results.  Host-deterministic bookkeeping (prefill position
+        advances, block-table growth) happens now so the serving loop
+        may keep scheduling; token-dependent state (output tokens,
+        ``last_token``, EOS, donor registration) lands at
+        ``resolve()``.  At most one step may be in flight per
+        executor."""
+        if self._pending is not None and not self._pending.resolved:
+            raise RuntimeError(
+                "step_async: previous step not resolved — the pipeline "
+                "must be flushed (commit the in-flight iteration) first")
         if self.paged:
-            return self._execute_paged(plan)
-        if self.batched:
-            return self._execute_batched(plan)
-        return self._execute_reference(plan)
+            step = self._step_paged(plan)
+        elif self.batched:
+            step = self._step_batched(plan)
+        else:
+            step = self._step_reference(plan)
+        if isinstance(step, PendingStep):
+            self._pending = step
+        return step
 
     # ---- paged hot path: one fused mixed-batch jit call ---------------
-    def _execute_paged(self, plan) -> Dict[int, bool]:
-        """Execute a whole TaiChi iteration — every prefill chunk AND
+    def _step_paged(self, plan) -> PendingStep:
+        """Dispatch a whole TaiChi iteration — every prefill chunk AND
         every decode step — as ONE jit call over the block pool.  Decode
         rows ride along as length-1 chunks (token = last sampled token,
         start = row position); per-row valid lengths and block tables
-        make the geometry uniform."""
-        eos: Dict[int, bool] = {}
+        make the geometry uniform.  Decode-only plans with ``horizon >
+        1`` take the K-step fused loop instead."""
+        K = getattr(plan, "horizon", 1)
+        if K > 1 and not plan.prefill_items and plan.decode_reqs:
+            return self._step_horizon_paged(plan, K)
         rows = []   # (req, slot, start, chunk, completes, is_decode)
         if plan.prefill_items:
             for req, start, take, completes in plan.prefill_rows():
@@ -517,70 +725,187 @@ class JaxExecutor:
                          min(int(self.positions[slot]), self.max_seq - 1),
                          [int(self.last_token[slot])], False, True))
         if not rows:
-            return eos
-        table_rows = []
-        for req, slot, start, chunk, _, _ in rows:
-            if not self._external_bookkeeping:
-                self.kv.ensure(req.rid,
-                               min(start + len(chunk), self.max_seq))
-            self.kv.refresh_row_if_grown(slot, req.rid)
-            table_rows.append(self.kv.tables[slot])
+            return ImmediateStep()
+        table_rows = [
+            self.kv.grow_for(slot, req.rid,
+                             min(start + len(chunk), self.max_seq),
+                             self._external_bookkeeping)
+            for req, slot, start, chunk, _, _ in rows]
         packed = batching.pack_mixed(
             [chunk for _, _, _, chunk, _, _ in rows],
             [start for _, _, start, _, _, _ in rows],
             table_rows, self.t_buckets, self.kv.max_blocks,
             self.cache_block_size)
-        toks, self.kv.pool = self._mixed_fused(
+        toks_dev, self.kv.pool = self._mixed_fused(
             self.params, self.kv.pool, jnp.asarray(packed.tokens),
             jnp.asarray(packed.start), jnp.asarray(packed.valid),
             jnp.asarray(packed.tables), self._next_key())
-        toks = np.asarray(toks)
-        for i, (req, slot, start, chunk, completes, is_dec) in \
-                enumerate(rows):
+        # position advances are token-independent: land them at dispatch
+        # so the next plan (and the decode rows' next dispatch) sees the
+        # post-iteration frontier without waiting on the device
+        for req, slot, start, chunk, _, is_dec in rows:
             if is_dec:
-                tok = int(toks[i])
-                req.output_tokens.append(tok)
-                self.last_token[slot] = tok
                 self.positions[slot] += 1
-                if self.eos_id is not None and tok == self.eos_id:
+            else:
+                self.positions[slot] = start + len(chunk)
+
+        def apply(arrays, handle) -> Dict[int, bool]:
+            toks = arrays[0]
+            eos: Dict[int, bool] = {}
+            for i, (req, slot, start, chunk, completes, is_dec) in \
+                    enumerate(rows):
+                if is_dec:
+                    tok = int(toks[i])
+                    req.output_tokens.append(tok)
+                    self.last_token[slot] = tok
+                    handle.emitted[req.rid] = 1
+                    if self.eos_id is not None and tok == self.eos_id:
+                        eos[req.rid] = True
+                    continue
+                if completes:
+                    tok = int(toks[i])
+                    req.output_tokens.append(tok)
+                    self.last_token[slot] = tok
+                    self._register_donor(req, slot)
+                    if self.eos_id is not None and tok == self.eos_id:
+                        eos[req.rid] = True
+            return eos
+
+        return PendingStep(self, (toks_dev,), apply)
+
+    def _step_horizon_paged(self, plan, K: int) -> PendingStep:
+        """K fused decode steps over the block pool: grow every row's
+        table to its end-of-horizon frontier, dispatch one scan, read
+        back once."""
+        budgets = plan.decode_budgets or [1] * len(plan.decode_reqs)
+        rows = []   # (req, slot, pos, budget)
+        for req, b in zip(plan.decode_reqs, budgets):
+            slot = self.slots.slot(req.rid)
+            pos = int(self.positions[slot])
+            self.kv.grow_for(slot, req.rid, min(pos + b, self.max_seq),
+                             self._external_bookkeeping)
+            rows.append((req, slot, pos, b))
+        packed = batching.pack_decode(
+            [int(self.last_token[s]) for _, s, _, _ in rows],
+            [p for _, _, p, _ in rows],
+            [b for _, _, _, b in rows],
+            [self.kv.tables[s] for _, s, _, _ in rows],
+            self.kv.max_blocks, self.cache_block_size)
+        toks, emitted, last, pos, done, self.kv.pool = self._horizon_paged(
+            self.params, self.kv.pool, jnp.asarray(packed.tokens),
+            jnp.asarray(packed.start), jnp.asarray(packed.budget),
+            jnp.asarray(packed.tables), self._next_key(), K)
+        self.horizon_calls += 1
+
+        def apply(arrays, handle) -> Dict[int, bool]:
+            toks_np, em_np, last_np, pos_np, done_np = arrays
+            eos: Dict[int, bool] = {}
+            for i, (req, slot, _, _) in enumerate(rows):
+                n = int(em_np[i])
+                handle.emitted[req.rid] = n
+                req.output_tokens.extend(
+                    int(t) for t in toks_np[:n, i])
+                self.last_token[slot] = int(last_np[i])
+                self.positions[slot] = int(pos_np[i])
+                self.horizon_tokens += n
+                if bool(done_np[i]):
                     eos[req.rid] = True
-                continue
-            self.positions[slot] = start + len(chunk)
-            if completes:
-                tok = int(toks[i])
-                req.output_tokens.append(tok)
-                self.last_token[slot] = tok
-                self._register_donor(req, slot)
-                if self.eos_id is not None and tok == self.eos_id:
-                    eos[req.rid] = True
-        return eos
+            return eos
+
+        return PendingStep(self, (toks, emitted, last, pos, done),
+                           apply, K)
 
     # ---- batched hot path --------------------------------------------
-    def _execute_batched(self, plan) -> Dict[int, bool]:
-        eos: Dict[int, bool] = {}
+    def _step_batched(self, plan) -> PendingStep:
+        K = getattr(plan, "horizon", 1)
+        if K > 1 and self.packed and not plan.prefill_items \
+                and plan.decode_reqs:
+            return self._step_horizon_dense(plan, K)
+        arrays: list = []
+        appliers: list = []
         if plan.prefill_items:
             rows = plan.prefill_rows()
             if self.packed:
-                self._prefill_packed_call(rows, eos)
+                self._dispatch_prefill_packed(rows, arrays, appliers)
             else:
-                self._prefill_slot_calls(rows, eos)
+                self._dispatch_prefill_slots(rows, arrays, appliers)
         if plan.decode_reqs:
-            toks, self.cache = self._decode_fused(
+            # the prefill dispatches above already advanced positions
+            # for their rows, so this full-batch call's harmless writes
+            # to non-decode slots land at post-chunk frontiers — exactly
+            # where the synchronous path put them
+            toks_dev, self.cache = self._decode_fused(
                 self.params, self.cache,
                 jnp.asarray(self.last_token[:, None]),
                 jnp.asarray(self.positions), self._next_key())
-            toks = np.asarray(toks)
-            for req in plan.decode_reqs:
-                slot = self.slots.slot(req.rid)
-                tok = int(toks[slot])
-                req.output_tokens.append(tok)
-                self.last_token[slot] = tok
-                self.positions[slot] += 1
-                if self.eos_id is not None and tok == self.eos_id:
-                    eos[req.rid] = True
-        return eos
+            arrays.append(toks_dev)
+            decode_reqs = list(plan.decode_reqs)
+            for req in decode_reqs:
+                self.positions[self.slots.slot(req.rid)] += 1
 
-    def _prefill_packed_call(self, rows, eos):
+            def apply_decode(toks, handle, eos):
+                for req in decode_reqs:
+                    slot = self.slots.slot(req.rid)
+                    tok = int(toks[slot])
+                    req.output_tokens.append(tok)
+                    self.last_token[slot] = tok
+                    handle.emitted[req.rid] = 1
+                    if self.eos_id is not None and tok == self.eos_id:
+                        eos[req.rid] = True
+
+            appliers.append(apply_decode)
+        if not arrays:
+            return ImmediateStep()
+
+        def apply(np_arrays, handle) -> Dict[int, bool]:
+            eos: Dict[int, bool] = {}
+            for arr, fn in zip(np_arrays, appliers):
+                fn(arr, handle, eos)
+            return eos
+
+        return PendingStep(self, arrays, apply)
+
+    def _step_horizon_dense(self, plan, K: int) -> PendingStep:
+        """K fused decode steps over the slot-contiguous dense cache:
+        the full slot batch rides through the scan, with per-slot
+        budgets freezing everything that is not a scheduled decode
+        row."""
+        budgets = plan.decode_budgets or [1] * len(plan.decode_reqs)
+        slot_budget = np.zeros(self.n_slots, np.int32)
+        rows = []   # (req, slot)
+        for req, b in zip(plan.decode_reqs, budgets):
+            slot = self.slots.slot(req.rid)
+            slot_budget[slot] = b
+            rows.append((req, slot))
+        toks, emitted, last, pos, done, self.cache = self._horizon_dense(
+            self.params, self.cache, jnp.asarray(self.last_token),
+            jnp.asarray(self.positions), jnp.asarray(slot_budget),
+            self._next_key(), K)
+        self.horizon_calls += 1
+
+        def apply(arrays, handle) -> Dict[int, bool]:
+            toks_np, em_np, last_np, pos_np, done_np = arrays
+            eos: Dict[int, bool] = {}
+            # update ONLY the scheduled rows' slots: other slots may
+            # have been written host-side (e.g. a migration landing)
+            # while this step was in flight, and frozen rows carried
+            # their inputs through unchanged anyway
+            for req, slot in rows:
+                n = int(em_np[slot])
+                handle.emitted[req.rid] = n
+                req.output_tokens.extend(
+                    int(t) for t in toks_np[:n, slot])
+                self.last_token[slot] = int(last_np[slot])
+                self.positions[slot] = int(pos_np[slot])
+                self.horizon_tokens += n
+                if bool(done_np[slot]):
+                    eos[req.rid] = True
+            return eos
+
+        return PendingStep(self, (toks, emitted, last, pos, done),
+                           apply, K)
+
+    def _dispatch_prefill_packed(self, rows, arrays, appliers):
         windows = [_prefill_window(req, start, take)
                    for req, start, take, _ in rows]
         chunks = [c for c, _ in windows]
@@ -588,14 +913,18 @@ class JaxExecutor:
         packed = batching.pack_prefill(
             chunks, [pos for _, pos in windows], row_slots,
             self.n_slots, self.t_buckets)
-        toks, self.cache = self._prefill_packed(
+        toks_dev, self.cache = self._prefill_packed(
             self.params, self.cache, packed.tokens, packed.start,
             packed.valid, packed.slots, self._next_key())
-        toks = np.asarray(toks)
+        arrays.append(toks_dev)
         for i, (req, start, take, completes) in enumerate(rows):
-            slot = row_slots[i]
-            self.positions[slot] = windows[i][1] + take
-            if completes:
+            self.positions[row_slots[i]] = windows[i][1] + take
+
+        def apply_prefill(toks, handle, eos):
+            for i, (req, start, take, completes) in enumerate(rows):
+                if not completes:
+                    continue
+                slot = row_slots[i]
                 tok = int(toks[i])
                 req.output_tokens.append(tok)
                 self.last_token[slot] = tok
@@ -603,25 +932,41 @@ class JaxExecutor:
                 if self.eos_id is not None and tok == self.eos_id:
                     eos[req.rid] = True
 
-    def _prefill_slot_calls(self, rows, eos):
+        appliers.append(apply_prefill)
+
+    def _dispatch_prefill_slots(self, rows, arrays, appliers):
         for req, start, take, completes in rows:
             slot = self.slots.slot(req.rid)
             tokens, pos = _prefill_window(req, start, take)
             chunk = np.asarray(tokens, np.int32)[None]
-            tok, self.cache = self._prefill_slot(
+            tok_dev, self.cache = self._prefill_slot(
                 self.params, self.cache, jnp.asarray(chunk),
                 jnp.full((1,), pos, jnp.int32),
                 jnp.int32(slot), self._next_key())
             self.positions[slot] = pos + take
-            if completes:
-                tok = int(tok[0])
+            arrays.append(tok_dev)
+
+            def apply_row(toks, handle, eos, req=req, slot=slot,
+                          completes=completes):
+                if not completes:
+                    return
+                tok = int(toks[0])
                 req.output_tokens.append(tok)
                 self.last_token[slot] = tok
                 self._register_donor(req, slot)
                 if self.eos_id is not None and tok == self.eos_id:
                     eos[req.rid] = True
 
+            appliers.append(apply_row)
+
     # ---- row-wise reference path (token-exact oracle) ----------------
+    def _step_reference(self, plan) -> PendingStep:
+        """The oracle keeps its simple one-call-per-row structure; it is
+        wrapped lazily so ``step_async`` has a uniform surface (compute
+        runs at resolve — there is nothing worth overlapping here)."""
+        return PendingStep(
+            self, (), lambda arrays, handle: self._execute_reference(plan))
+
     def _execute_reference(self, plan) -> Dict[int, bool]:
         eos: Dict[int, bool] = {}
         # --- chunked prefill (row-wise, exact shapes) ---
@@ -639,7 +984,11 @@ class JaxExecutor:
                 # the sampled first token is NOT yet in the cache; it is
                 # written when fed to the next decode step at position
                 # == prompt_len (positions[slot] already points there).
-                tok = self._sample(last[0])
+                # Sampling happens on device — only the token id crosses.
+                tok_dev = self._sample_batch(last, self._next_key())
+                self.host_readbacks += 1
+                self.host_syncs += 1
+                tok = int(np.asarray(tok_dev)[0])
                 req.output_tokens.append(tok)
                 self.last_token[slot] = tok
                 self._register_donor(req, slot)
@@ -651,9 +1000,12 @@ class JaxExecutor:
             pos = jnp.asarray(self.positions)
             logits, self.cache = self._decode(self.params, self.cache,
                                               tokens, pos)
+            toks = np.asarray(self._sample_batch(logits, self._next_key()))
+            self.host_readbacks += 1
+            self.host_syncs += 1
             active = [(r, self.slots.slot(r.rid)) for r in plan.decode_reqs]
             for req, slot in active:
-                tok = self._sample(logits[slot])
+                tok = int(toks[slot])
                 req.output_tokens.append(tok)
                 self.last_token[slot] = tok
                 self.positions[slot] += 1
@@ -663,6 +1015,13 @@ class JaxExecutor:
 
     # ------------------------------------------------------------------
     def extract_state(self, req: Request):
+        if self._pending is not None and not self._pending.resolved:
+            # an eject mid-horizon would read post-horizon tensors
+            # against pre-horizon host bookkeeping — the scheduler must
+            # commit (flush) the in-flight iteration before migrating
+            raise RuntimeError(
+                f"extract_state({req.rid}): an async step is in flight; "
+                "resolve it (commit the iteration) before ejecting")
         slot = self.slots.slot(req.rid)
         if self.paged:
             # ship only the blocks actually covering the written context
@@ -764,6 +1123,13 @@ class SimExecutor:
 
     def execute(self, plan) -> Dict[int, bool]:
         return {}
+
+    def step_async(self, plan) -> ImmediateStep:
+        """Nothing computes, so nothing is ever in flight — but exposing
+        the async surface lets the serving loop run its dispatch/commit
+        pipeline (and the horizon timing model) deterministically in
+        simulation."""
+        return ImmediateStep()
 
     def add_request(self, req: Request):
         pass

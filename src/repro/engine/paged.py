@@ -104,6 +104,20 @@ class PagedKVCache:
         if n != self._fill[slot]:
             self.refresh_row(slot, rid)
 
+    def grow_for(self, slot: int, rid: int, tokens: int,
+                 external_bookkeeping: bool):
+        """Dispatch-time growth: make sure ``rid`` owns blocks covering
+        ``tokens`` total context (skipped under external bookkeeping,
+        where the Instance already extended the shared allocator) and
+        bring the slot's table up to date.  Returns the table row — for
+        a decode horizon, ``tokens`` is the END-of-horizon frontier, so
+        the fused loop's write pointer can advance through the table
+        without host round trips."""
+        if not external_bookkeeping:
+            self.ensure(rid, tokens)
+        self.refresh_row_if_grown(slot, rid)
+        return self.tables[slot]
+
     def clear_row(self, slot: int):
         self.tables[slot].fill(-1)
         self._fill[slot] = 0

@@ -124,6 +124,13 @@ class Request:
         return self.output_len >= self.target_output_len
 
     @property
+    def remaining_output(self) -> int:
+        """Tokens this request may still emit — the cap on its per-row
+        decode-horizon budget (a K-step loop must stop exactly where
+        the K=1 schedule would)."""
+        return max(self.target_output_len - self.output_len, 0)
+
+    @property
     def effective_output_len(self) -> int:
         """Output length since the last backflow reset — what longest-first
         degradation ranks on (a flowed-back request counts as 'new')."""

@@ -37,3 +37,12 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
     if env is not None and env.strip() != "":
         return env.strip().lower() not in ("0", "false", "no")
     return not backend_is_tpu()
+
+
+def kernels_native_default() -> bool:
+    """Serving-default kernel wiring: True when the resolved backend
+    lowers Pallas natively (real TPU, or the env var forcing native) —
+    serving entry points then flip ``attention.use_kernels(True)`` so
+    the paged decode/prefill kernels dereference block tables at DMA
+    time instead of materializing the jnp gather view."""
+    return not resolve_interpret(None)

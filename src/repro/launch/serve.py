@@ -46,9 +46,16 @@ def _live_mode(args, slo: SLO):
     tokens stream as they are computed, telemetry snapshots print as
     JSON lines, and the controller may retune sliders mid-run."""
     from repro.engine.engine import JaxExecutor
+    from repro.kernels import kernels_native_default
+    from repro.models import attention
     from repro.models import transformer as tf
     from repro.serving import (ControllerConfig, ServingLoop,
                                SliderController, WallClock)
+    if kernels_native_default():
+        # serving default on a real TPU backend: paged Pallas kernels
+        # dereference block tables at DMA time (CPU keeps the jnp
+        # reference read, where the kernels would only interpret)
+        attention.use_kernels(True)
     cfg = reduced_config(args.arch)
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     sc = ServingConfig(model=args.arch, tp=1, policy=args.policy,
@@ -57,7 +64,10 @@ def _live_mode(args, slo: SLO):
                                        s_d=min(args.sd, 32)),
                        hbm_blocks=512)
     factory = lambda: JaxExecutor(cfg, params, n_slots=8, max_seq=512)
-    cluster = build_cluster(sc, slo, executor_factory=factory)
+    cluster = build_cluster(sc, slo, executor_factory=factory,
+                            async_exec=not args.no_async)
+    if args.horizon > 1:
+        cluster.set_horizon(args.horizon)
     ctl = None
     if args.controller:
         ctl = SliderController(ControllerConfig(
@@ -124,6 +134,12 @@ def main():
                     help="live: print every streamed token")
     ap.add_argument("--pace", action="store_true",
                     help="live: pace events to wall-clock time")
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="live: max fused decode steps per iteration "
+                         "(adaptive; 1 = classic single-step)")
+    ap.add_argument("--no-async", action="store_true",
+                    help="live: disable the non-blocking dispatch/"
+                         "commit executor pipeline")
     args = ap.parse_args()
 
     slo = SLO(ttft=args.ttft_slo, tpot=args.tpot_slo)

@@ -174,6 +174,14 @@ class TelemetryWindow:
             "decoding": len(inst.decoding),
             "pending_decode": len(inst.pending_decode),
             "hbm_util": round(inst.hbm_utilization(), 4),
+            # decode-horizon pipeline state: K of the last planned
+            # iteration and whether an async step is currently in
+            # flight.  Token timestamps are spread across the horizon's
+            # per-step durations at commit, so the in-flight TPOT
+            # signals above read the lagged stream without distortion.
+            "horizon": getattr(inst, "last_horizon", 1),
+            "inflight": bool(getattr(inst, "has_inflight",
+                                     lambda: False)()),
             # mean prefill tokens co-batched per decode-carrying
             # iteration — the interference the controller trades against
             # prefill capacity

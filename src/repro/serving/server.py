@@ -31,7 +31,7 @@ from repro.core.cluster import ARRIVAL, Cluster
 from repro.core.instance import Instance
 from repro.core.latency import SLO, RunStats
 from repro.engine.request import Request, State
-from repro.serving.clock import VirtualClock
+from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.metrics import MetricsLog, TelemetryWindow
 
 
@@ -212,6 +212,45 @@ class ServingLoop:
             self.cluster._schedule_iter(thief, self.cluster.now)
 
     # ------------------------------------------------------------------
+    # pacing: wait on either the next event OR horizon completion
+    # ------------------------------------------------------------------
+    #: wall-clock slice between pipeline-readiness polls while pacing
+    PACE_SLICE = 0.005
+
+    def _pending_steps(self):
+        """Unresolved async executor steps currently in flight."""
+        return [p for inst in self.cluster.instances
+                if (p := inst.pending_step()) is not None]
+
+    def _prefetch_ready(self, pending) -> None:
+        for p in pending:
+            if not p.resolved and p.ready():
+                p.prefetch()
+
+    def _pace_until(self, t: float):
+        """Sleep to the next event time WITHOUT serializing ingestion
+        behind compute: instead of one dead sleep, the gap is sliced and
+        each slice polls the in-flight executor steps — the moment a
+        horizon's device work completes, its results are prefetched to
+        the host, so the commit event at ``t`` never blocks.  The wait
+        thus ends on whichever comes first matters: the next scheduled
+        event (arrival/commit/transfer) or in-flight work becoming
+        consumable."""
+        pending = self._pending_steps()
+        if not pending or not isinstance(self.clock, WallClock):
+            # virtual time (or nothing in flight): a plain jump — but
+            # still harvest anything that already landed
+            self._prefetch_ready(pending)
+            self.clock.sleep_until(t)
+            return
+        while True:
+            self._prefetch_ready(pending)
+            now = self.clock.now
+            if now >= t:
+                return
+            self.clock.sleep_until(min(t, now + self.PACE_SLICE))
+
+    # ------------------------------------------------------------------
     # the loop
     # ------------------------------------------------------------------
     def run(self, until: Optional[float] = None,
@@ -232,7 +271,7 @@ class ServingLoop:
             if until is not None and t > until:
                 break
             if self._pace:
-                self.clock.sleep_until(t)
+                self._pace_until(t)
             stepped = self.cluster.step()
             if stepped is None:
                 continue

@@ -32,7 +32,8 @@ class ServingConfig:
 
 def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
                   executor_factory: Optional[Callable] = None,
-                  taichi_flags: Optional[dict] = None) -> Cluster:
+                  taichi_flags: Optional[dict] = None,
+                  async_exec: bool = False) -> Cluster:
     cfg = get_config(sc.model)
     cost = CostModel(cfg, InstanceSpec(tp=sc.tp))
     factory = executor_factory or (lambda: SimExecutor())
@@ -59,7 +60,7 @@ def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
                               sliders=s, seed=seed, **(taichi_flags or {}))
     else:
         raise ValueError(sc.policy)
-    return Cluster(policy, cost)
+    return Cluster(policy, cost, async_exec=async_exec)
 
 
 def run_sim(sc: ServingConfig, slo: SLO, workload: WorkloadSpec,
