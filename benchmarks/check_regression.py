@@ -17,6 +17,12 @@ baseline with::
     PYTHONPATH=src:. python benchmarks/engine_bench.py
     cp benchmarks/out/engine_bench.json benchmarks/baselines/
 
+With ``--kv`` (or ``--kv-only``) it additionally re-checks the
+multi-tier KV pressure bench's recorded acceptance floors from
+``benchmarks/out/kv_pressure.json`` — int8 effective capacity, the
+spill tier's TTFT win over drop-and-recompute, and the tier stack's
+goodput gain.
+
 Usage:  python benchmarks/check_regression.py [--fresh path] [--baseline path]
 """
 from __future__ import annotations
@@ -63,6 +69,39 @@ def check(fresh_path: str, baseline_path: str, tol: float) -> int:
     return 0
 
 
+#: multi-tier KV acceptance floors re-checked from the recorded JSON
+#: (the sim is seed-deterministic, so these reproduce across machines)
+KV_CAPACITY_FLOOR = 1.8
+
+
+def check_kv_pressure(path: str) -> int:
+    """Gate over benchmarks/out/kv_pressure.json: the int8 tier must
+    keep its effective-capacity floor, spill must beat
+    drop-and-recompute on mean/p99 TTFT, and the tier stack must win
+    goodput under the eviction-forcing pool."""
+    with open(path) as f:
+        res = json.load(f)
+    s = res["summary"]
+    checks = [
+        ("int8_capacity_ratio", res["int8_capacity_ratio"],
+         KV_CAPACITY_FLOOR),
+        ("spill_mean_ttft_reduction", s["spill_mean_ttft_reduction"], 0.0),
+        ("spill_p99_ttft_reduction", s["spill_p99_ttft_reduction"], 0.0),
+        ("tiered_goodput_gain", s["tiered_goodput_gain"], 1.0),
+    ]
+    failures = []
+    for name, got, floor in checks:
+        status = "ok" if got > floor else "REGRESSION"
+        print(f"{name:>26}: {got:.3f} (floor {floor}) {status}")
+        if got <= floor:
+            failures.append(f"{name} {got:.3f} <= floor {floor}")
+    if failures:
+        print("\nFAIL:\n  " + "\n  ".join(failures))
+        return 1
+    print("\nOK: multi-tier KV floors hold")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh",
@@ -72,8 +111,20 @@ def main():
                                          "engine_bench.json"))
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("REPRO_BENCH_TOL", "0.20")))
+    ap.add_argument("--kv", nargs="?", const=os.path.join(
+        HERE, "out", "kv_pressure.json"),
+        help="also gate the multi-tier KV pressure bench JSON "
+             "(skips the engine check when given alone with --kv-only)")
+    ap.add_argument("--kv-only", action="store_true",
+                    help="gate only the KV pressure JSON")
     args = ap.parse_args()
-    sys.exit(check(args.fresh, args.baseline, args.tol))
+    rc = 0
+    if not args.kv_only:
+        rc |= check(args.fresh, args.baseline, args.tol)
+    if args.kv or args.kv_only:
+        rc |= check_kv_pressure(args.kv or os.path.join(
+            HERE, "out", "kv_pressure.json"))
+    sys.exit(rc)
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ MODULES = [
     "fig19_overhead",        # Fig 19 (C7)
     "prefix_cache_bench",    # shared-prefix KV cache vs. no-cache baseline
     "controller_bench",      # online slider controller vs. static/offline
+    "kv_pressure_bench",     # multi-tier KV under a constrained pool
     "kernel_bench",          # kernels microbench
     "roofline_report",       # dry-run roofline table
 ]

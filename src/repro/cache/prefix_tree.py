@@ -29,7 +29,8 @@ _ROOT_HASH = 0
 
 
 class Node:
-    __slots__ = ("chain", "tokens", "bid", "parent", "children", "last_used")
+    __slots__ = ("chain", "tokens", "bid", "parent", "children",
+                 "last_used", "hit_count")
 
     def __init__(self, chain: int, tokens: tuple, bid, parent: "Node"):
         self.chain = chain
@@ -38,6 +39,7 @@ class Node:
         self.parent = parent
         self.children: Dict[int, "Node"] = {}
         self.last_used = 0
+        self.hit_count = 0            # touching matches through this node
 
 
 def chain_hashes(tokens: Sequence[int], block_size: int):
@@ -78,6 +80,7 @@ class PrefixTree:
                 break
             if touch:
                 child.last_used = next(self._clock)
+                child.hit_count += 1
             path.append(child)
             node = child
         return path
@@ -139,6 +142,28 @@ class PrefixTree:
                 child.parent = None
                 stack.append(child)
             n.children.clear()
+
+    # ------------------------------------------------------------------
+    def hot_paths(self, max_paths: int = 2,
+                  min_hits: int = 3) -> List[tuple]:
+        """Hottest matchable prefixes for cross-instance replication:
+        ``[(token_prefix, hits)]``, hottest first.  For every chain whose
+        nodes each matched at least ``min_hits`` times, only the deepest
+        such node is reported (a parent's hit count is always >= its
+        children's, so the frontier is well defined)."""
+        out = []
+        stack = [(self.root, ())]
+        while stack:
+            node, toks = stack.pop()
+            for child in node.children.values():
+                ctoks = toks + child.tokens
+                if child.hit_count >= min_hits:
+                    if not any(c.hit_count >= min_hits
+                               for c in child.children.values()):
+                        out.append((ctoks, child.hit_count))
+                    stack.append((child, ctoks))
+        out.sort(key=lambda e: -e[1])
+        return out[:max_paths]
 
     # ------------------------------------------------------------------
     def lru_evictable(self, evictable) -> Optional[Node]:

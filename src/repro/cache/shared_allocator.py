@@ -113,9 +113,18 @@ class SharedBlockAllocator:
         n_fresh = need - len(shared)
         if n_fresh < 0:
             raise ValueError("shared prefix longer than allocation")
-        # refs first, so eviction below can never reclaim the prefix
-        for bid in shared:
-            self._incref(bid)
+        # refs first, so eviction below can never reclaim the prefix.
+        # Roll back on a mid-list failure (a bid evicted between the
+        # caller's peek and this claim): partial increfs must not leak.
+        taken = 0
+        try:
+            for bid in shared:
+                self._incref(bid)
+                taken += 1
+        except KeyError:
+            for bid in shared[:taken]:
+                self._decref(bid)
+            raise
         fresh: List[int] = []
         try:
             for _ in range(n_fresh):
@@ -198,6 +207,29 @@ class SharedBlockAllocator:
             self.on_evict(bid)
 
     # ------------------------------------------------------------------
+    # tier promotion / replication support
+    # ------------------------------------------------------------------
+    def adopt_cached(self) -> int:
+        """Draw a block directly into the retained cache (refcount 0,
+        registered) — the HBM landing spot for a block promoted from a
+        lower tier or replicated in from another instance.  May evict
+        other cached blocks to make room (which re-spills them when a
+        spill tier is wired to ``on_evict``)."""
+        bid = self._take_fresh()
+        self._registered.add(bid)
+        self._cached[bid] = None
+        return bid
+
+    def pin(self, bid: int) -> None:
+        """Take a reference on a live or cached block.  Guards multi-step
+        promotions: a pinned block can neither be evicted nor picked as
+        a victim while tensor copies for its neighbours are in flight."""
+        self._incref(bid)
+
+    def unpin(self, bid: int) -> None:
+        self._decref(bid)
+
+    # ------------------------------------------------------------------
     def _incref(self, bid: int) -> None:
         n = self._refcount.get(bid, 0)
         if n == 0:
@@ -225,7 +257,10 @@ class SharedBlockAllocator:
         victim = None
         if self.pick_eviction is not None:
             victim = self.pick_eviction()
-        if victim is None:
+        if victim not in self._cached or self._refcount.get(victim, 0) > 0:
+            # the callback is advisory, never trusted: a referenced,
+            # unknown, or already-evicted victim would corrupt the pool
+            # (double-free / dropping live KV) — fall back to LRU order
             victim = next(iter(self._cached))     # oldest retained
         self.evict(victim)
         return self._free.pop()

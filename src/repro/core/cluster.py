@@ -60,6 +60,8 @@ class Cluster:
         self.now = 0.0
         self.transfer_count = 0
         self.transfer_bytes = 0
+        self.replication_count = 0
+        self.replication_bytes = 0
         self.backflow_count = 0
         self.degrade_count = 0
         self.drain_count = 0
@@ -92,6 +94,23 @@ class Cluster:
         self.transfer_count += 1
         self.transfer_bytes += self.cost.state_bytes(moved)
         self._push(now + t, TRANSFER, (req, dst, state, kind))
+
+    def replicate_prefix(self, src: Instance, dst: Instance,
+                         tokens, now: Optional[float] = None) -> bool:
+        """Ship a hot cached prefix from ``src`` to ``dst`` through the
+        ordinary TRANSFER machinery — block-granular, no request
+        attached, charged at migration bandwidth but entirely off the
+        critical path (the destination keeps serving while it lands)."""
+        state = src.export_prefix(tokens)
+        if state is None:
+            return False
+        now = self.now if now is None else now
+        moved = state["n_blocks"] * src.prefix_cache.block_size
+        t = self.cost.transfer_time(moved)
+        self.replication_count += 1
+        self.replication_bytes += self.cost.state_bytes(moved)
+        self._push(now + t, TRANSFER, (None, dst, state, "replicate"))
+        return True
 
     # ------------------------------------------------------------------
     # incremental interface (driven by repro.serving.server)
@@ -133,6 +152,12 @@ class Cluster:
             self._schedule_iter(inst, now)
         elif kind == TRANSFER:
             req, dst, state, move_kind = data
+            if move_kind == "replicate":
+                # no request rides along: the payload lands straight
+                # into the destination's cache tiers (best effort —
+                # a full pool admits nothing rather than evicting)
+                dst.replicate_in(state)
+                return
             dst.inject(req, state)
             if move_kind == "backflow":
                 req.reset_tpot_window()

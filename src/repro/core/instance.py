@@ -167,6 +167,9 @@ class Instance:
         self.cache_lookups: int = 0
         self.cache_hits: int = 0
         self.cached_prefill_tokens: int = 0    # prefill tokens NOT recomputed
+        # multi-tier KV accounting
+        self.spill_promoted_tokens: int = 0    # host tier -> HBM prefetches
+        self.replicas_in: int = 0              # blocks landed by replication
 
     # ------------------------------------------------------------------
     # admission / queues
@@ -187,10 +190,14 @@ class Instance:
     def peek_prefix(self, req: Request) -> int:
         """Longest cached prefix (tokens) this instance could reuse for
         ``req`` — pure, so the proxy can probe every instance when
-        routing (cache-aware TTFT_hat)."""
+        routing (cache-aware TTFT_hat).  Counts BOTH tiers: host-spilled
+        blocks are promoted back to HBM at admission (``prefetch``), so
+        for routing purposes they are as reusable as resident ones."""
         if req.prefill_pos != 0:
             return 0
-        return self._match_prefix(req)
+        if self.prefix_cache is None or not req.prompt_tokens:
+            return 0
+        return self.prefix_cache.match_tokens_tiered(req.prompt_tokens)
 
     def _match_prefix(self, req: Request) -> int:
         if self.prefix_cache is None or not req.prompt_tokens:
@@ -317,6 +324,15 @@ class Instance:
             else:
                 self.stalled_decodes += 1
         budget = max(0, self.chunk_size - len(decode_reqs))
+        if self.chunk_size <= 0 and self.prefill_queue \
+                and self.allocator.holds(self.prefill_queue[0].rid):
+            # a zeroed chunk slider (set_chunks(0) / drain-and-flip)
+            # must never strand an ADMITTED mid-chunk prefill: it holds
+            # HBM blocks and budget can never recover on its own, so
+            # grant a minimal budget to keep it flowing to completion.
+            # (A decode batch merely as wide as a positive chunk is NOT
+            # stranding — budget frees as decodes finish.)
+            budget = min(64, self.prefill_queue[0].prefill_remaining)
         items: List[Tuple[Request, int]] = []
         while budget > 0 and self.prefill_queue:
             head = self.prefill_queue[0]
@@ -369,7 +385,14 @@ class Instance:
             self.allocator.allocate(req.rid, need)
             self.executor.add_request(req)
             return True
-        hit = self.peek_prefix(req)
+        if self.prefix_cache.spill is not None and req.prompt_tokens \
+                and req.prefill_pos == 0:
+            # promote host-spilled continuation blocks back to HBM now,
+            # so the match below (and the claim) sees them as resident —
+            # a prefix the routing peek counted never silently recomputes
+            self.spill_promoted_tokens += self.prefix_cache.prefetch(
+                req.prompt_tokens)
+        hit = 0 if req.prefill_pos != 0 else self._match_prefix(req)
         if not self.prefix_cache.can_acquire(req.prompt_tokens or (),
                                              hit, need):
             return False       # memory-blocked: no executor side effects
@@ -576,3 +599,49 @@ class Instance:
     def has_work(self) -> bool:
         return bool(self.prefill_queue or self.decoding or
                     self.pending_decode)
+
+    # ------------------------------------------------------------------
+    # hot-prefix replication (cross-instance, block-granular)
+    # ------------------------------------------------------------------
+    def hot_prefixes(self, max_paths: int = 2,
+                     min_hits: int = 3) -> List[Tuple[tuple, int]]:
+        """This instance's hottest matchable token prefixes (by touching
+        match count) — the controller's replication candidates."""
+        if self.prefix_cache is None:
+            return []
+        return self.prefix_cache.hot_prefixes(max_paths, min_hits)
+
+    def export_prefix(self, tokens: Sequence[int]):
+        """Opaque replication payload for the resident full-block prefix
+        of ``tokens`` (None when nothing is cached).  Side-effect free.
+        On a real engine the payload carries gathered pool tensors; the
+        simulator ships bookkeeping only."""
+        exp = getattr(self.executor, "export_prefix_blocks", None)
+        if exp is not None:
+            return exp(tokens)
+        pc = self.prefix_cache
+        if pc is None:
+            return None
+        n = len(tokens) // pc.block_size
+        path = pc.tree.match(tokens, n, touch=False)
+        if not path:
+            return None
+        return {"paged_blocks": None, "n_blocks": len(path),
+                "tokens": list(tokens[:len(path) * pc.block_size]),
+                "kv_format": "sim"}
+
+    def replicate_in(self, state) -> int:
+        """Land a replicated prefix payload into the local cache.
+        Returns blocks newly admitted (0 when already resident or no
+        free room — replicas never evict local content)."""
+        imp = getattr(self.executor, "import_prefix_blocks", None)
+        if imp is not None:
+            landed = imp(state)
+        else:
+            pc = self.prefix_cache
+            if pc is None:
+                return 0
+            res = pc.admit_replica(state["tokens"], state["n_blocks"])
+            landed = 0 if res is None else len(res[1]) - res[0]
+        self.replicas_in += landed
+        return landed

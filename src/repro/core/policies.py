@@ -178,13 +178,17 @@ class TaiChiPolicy(BasePolicy):
 def build_instances(cost: CostModel, sliders: Sliders,
                     executor_factory, hbm_blocks: int = 4096,
                     block_size: int = 16,
-                    prefix_cache: bool = False) -> List[Instance]:
+                    prefix_cache: bool = False,
+                    spill_blocks: int = 0) -> List[Instance]:
     """Instantiate the differentiated-capability pool.  With
     ``prefix_cache`` each instance owns a shared-prefix KV cache over
-    its own HBM block pool (prefixes are per-instance — cross-instance
-    replication is an open item)."""
+    its own HBM block pool; ``spill_blocks`` adds a host-RAM tier per
+    instance that catches LRU-evicted prefix blocks (prefixes stay
+    per-instance — the controller's replication pass copies hot ones
+    across)."""
     def make(iid, itype, chunk):
-        pc = (PrefixCache(hbm_blocks, block_size) if prefix_cache
+        pc = (PrefixCache(hbm_blocks, block_size,
+                          spill_blocks=spill_blocks) if prefix_cache
               else None)
         return Instance(iid, itype, chunk, cost, executor_factory(),
                         hbm_blocks, block_size, prefix_cache=pc)

@@ -192,7 +192,9 @@ class JaxExecutor:
                  temperature: float = 1.0, prefix_cache: bool = False,
                  cache_block_size: int = 16,
                  paged: Optional[bool] = None,
-                 hbm_blocks: Optional[int] = None):
+                 hbm_blocks: Optional[int] = None,
+                 kv_quant: Optional[str] = None,
+                 kv_spill_blocks: int = 0):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -234,6 +236,9 @@ class JaxExecutor:
         # ---- paged physical cache (default wherever paging is exact) --
         self.paged = (batched and packable(cfg) if paged is None
                       else bool(paged) and batched and packable(cfg))
+        if kv_quant not in (None, "int8"):
+            raise ValueError(f"unsupported kv_quant: {kv_quant!r}")
+        self.kv_quant = kv_quant if self.paged else None
         self.kv: Optional[PagedKVCache] = None
         self.prefix_cache_obj: Optional[PrefixCache] = None
         # True once an Instance drives allocate/extend/free on our
@@ -251,10 +256,14 @@ class JaxExecutor:
                              + self.HEADROOM // cache_block_size))
             alloc = None
             if self.prefix_cache_enabled:
-                self.prefix_cache_obj = PrefixCache(nb, cache_block_size)
+                self.prefix_cache_obj = PrefixCache(
+                    nb, cache_block_size, spill_blocks=kv_spill_blocks)
                 alloc = self.prefix_cache_obj.allocator
             self.kv = PagedKVCache(cfg, n_slots, max_seq, nb,
-                                   cache_block_size, allocator=alloc)
+                                   cache_block_size, allocator=alloc,
+                                   quant=kv_quant)
+            if self.prefix_cache_obj is not None:
+                self._bind_spill(self.prefix_cache_obj)
             self.cache = None            # no dense rows: that's the point
         else:
             self.cache = tf.init_cache(cfg, n_slots, max_seq)
@@ -474,8 +483,23 @@ class JaxExecutor:
             return False
         self.prefix_cache_obj = pc
         self.kv.rebind_allocator(pc.allocator)
+        self._bind_spill(pc)
         self._external_bookkeeping = True
         return True
+
+    def _bind_spill(self, pc: PrefixCache):
+        """Give the prefix cache's host spill tier real tensor legs:
+        eviction snapshots a block's pool slice to host RAM, promotion
+        scatters it back into whatever block id the allocator hands
+        out.  Without this binding the tier still runs (bookkeeping-only
+        payloads), which is what the simulator uses."""
+        if pc.spill is None:
+            return
+        pc.bind_tiers(
+            fetch_block=lambda bid: jax.tree.map(
+                np.asarray, self.kv.extract_blocks([bid])),
+            load_block=lambda bid, payload: self.kv.insert_blocks(
+                [bid], payload))
 
     def sync(self):
         """Block until all in-flight cache updates land (benchmarks)."""
@@ -1032,7 +1056,8 @@ class JaxExecutor:
             return {"paged_blocks": self.kv.extract_blocks(bids),
                     "n_blocks": len(bids), "pos": ctx,
                     "last_token": int(self.last_token[slot]),
-                    "prompt_tokens": list(req.prompt_tokens or ())}
+                    "prompt_tokens": list(req.prompt_tokens or ()),
+                    "kv_format": self.kv_quant or "fp"}
         row = migrate.extract_row(self.cache, slot)
         return {"row": row, "pos": int(self.positions[slot]),
                 "last_token": int(self.last_token[slot])}
@@ -1073,6 +1098,16 @@ class JaxExecutor:
         once the instance's admission gate (can_allocate in
         _try_admit_pending) lets the request through — same graceful
         queueing as the dense path's allocation-at-admission contract."""
+        fmt = state.get("kv_format", "fp")
+        want = self.kv_quant or "fp"
+        if fmt != want:
+            # int8 blocks carry scale leaves fp pools don't have (and
+            # vice versa) — a blind scatter would silently misinterpret
+            # the payload; migrate between like-quantized engines
+            raise MigrationFormatError(
+                f"request {req.rid}: migrated KV is {fmt!r} but the "
+                f"destination pool is {want!r} — cross-format "
+                "migration is unsupported")
         prompt = req.prompt_tokens or state.get("prompt_tokens") or []
         shared_bids: list = []
         if self.prefix_cache_enabled and self.prefix_cache_obj and prompt:
@@ -1103,6 +1138,54 @@ class JaxExecutor:
         # republish the full prompt blocks so the migrated context is
         # adoptable on this instance
         self._register_donor(req, slot)
+
+    # ------------------------------------------------------------------
+    # hot-prefix replication (block-granular, no request attached)
+    # ------------------------------------------------------------------
+    def export_prefix_blocks(self, tokens: Sequence[int]):
+        """Gather the cached pool blocks covering the longest resident
+        full-block prefix of ``tokens``, for replication to a peer
+        instance.  Side-effect free (no refcounts, no LRU touch) and
+        deliberately NOT capped like match_tokens: a hot path's last
+        full block is worth shipping even when a future request would
+        still owe one prefill token."""
+        pc = self.prefix_cache_obj
+        if not self.paged or pc is None:
+            return None
+        n = len(tokens) // self.cache_block_size
+        path = pc.tree.match(tokens, n, touch=False)
+        if not path:
+            return None
+        bids = [nd.bid for nd in path]
+        return {"paged_blocks": self.kv.extract_blocks(bids),
+                "n_blocks": len(bids),
+                "tokens": list(tokens[:len(bids) * self.cache_block_size]),
+                "kv_format": self.kv_quant or "fp"}
+
+    def import_prefix_blocks(self, state) -> int:
+        """Land replicated prefix blocks into this pool and publish them
+        to the donor tree.  Returns blocks newly admitted (0 when the
+        prefix is already resident, nothing fit below the free
+        watermark, or the payload carries no tensors — a bookkeeping-
+        only payload must never alias garbage pool contents)."""
+        pc = self.prefix_cache_obj
+        if not self.paged or pc is None:
+            return 0
+        fmt = state.get("kv_format", "fp")
+        want = self.kv_quant or "fp"
+        if fmt != want:
+            raise MigrationFormatError(
+                f"replicated KV is {fmt!r} but the destination pool is "
+                f"{want!r} — cross-format replication is unsupported")
+        if state.get("paged_blocks") is None:
+            return 0
+        res = pc.admit_replica(state["tokens"], state["n_blocks"])
+        if res is None:
+            return 0
+        skip, bids = res
+        self.kv.insert_blocks(bids, state["paged_blocks"],
+                              skip_blocks=skip)
+        return len(bids) - skip
 
     def migration_bytes(self, req: Request) -> int:
         slot = self.slots.slot(req.rid)

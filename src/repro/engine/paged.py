@@ -34,12 +34,14 @@ from repro.models import transformer as tf
 class PagedKVCache:
     def __init__(self, cfg, n_slots: int, max_seq: int, num_blocks: int,
                  block_size: int, dtype=None,
-                 allocator: Optional[SharedBlockAllocator] = None):
+                 allocator: Optional[SharedBlockAllocator] = None,
+                 quant: Optional[str] = None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.block_size = block_size
         self.dtype = dtype
+        self.quant = quant
         # table width: blocks addressable by in-range positions.  The
         # allocator may hold MORE blocks for a request (growth headroom
         # beyond max_seq is never read or written) — tables truncate.
@@ -50,7 +52,7 @@ class PagedKVCache:
             raise ValueError("allocator/pool block_size mismatch")
         self.num_blocks = self.allocator.num_blocks
         self.pool = tf.init_paged_cache(cfg, self.num_blocks, block_size,
-                                        dtype)
+                                        dtype, quant=quant)
         self.tables = np.full((n_slots, self.max_blocks), -1, np.int32)
         self._fill = np.zeros(n_slots, np.int32)   # valid entries per row
 
@@ -70,7 +72,8 @@ class PagedKVCache:
         if allocator.num_blocks != self.num_blocks:
             self.num_blocks = allocator.num_blocks
             self.pool = tf.init_paged_cache(self.cfg, self.num_blocks,
-                                            self.block_size, self.dtype)
+                                            self.block_size, self.dtype,
+                                            quant=self.quant)
         self.tables.fill(-1)
         self._fill.fill(0)
 
@@ -165,6 +168,23 @@ class PagedKVCache:
     def pool_bytes(self) -> int:
         return sum(a.size * a.dtype.itemsize
                    for a in jax.tree.leaves(self.pool["segments"]))
+
+    def effective_capacity_ratio(self) -> float:
+        """Resident tokens per HBM byte relative to the unquantized pool
+        (1.0 when quantization is off): the factor by which a fixed byte
+        budget buys more blocks under the int8 tier."""
+        if self.quant is None:
+            return 1.0
+        ref = PagedKVCache.token_bytes_for(self.cfg, self.dtype)
+        return ref / self.token_bytes()
+
+    @staticmethod
+    def token_bytes_for(cfg, dtype=None, quant: Optional[str] = None) -> int:
+        """KV bytes per cached token for a config without materializing
+        a pool (sizing block budgets in benchmarks)."""
+        probe = tf.init_paged_cache(cfg, 1, 1, dtype, quant=quant)
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves(probe["segments"]))
 
     # ------------------------------------------------------------------
     # invariants (exercised by property tests)

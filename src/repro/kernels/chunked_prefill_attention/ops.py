@@ -68,10 +68,18 @@ def chunked_prefill_attention(q, k, v, prefix, *, bq: int = 128,
                             interpret=resolve_interpret(interpret))
 
 
+def _scale_pool_blocks(scale_pool, n_blk: int, block_size: int):
+    """[P, Hkv] f32 scale pool -> [n_blk, Hkv, bs, 1] per-block DMA
+    layout (mirrors the KV pool reshape)."""
+    Hkv = scale_pool.shape[1]
+    return (scale_pool.reshape(n_blk, block_size, Hkv)
+            .transpose(0, 2, 1)[..., None])
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_size", "bq", "interpret"))
-def _paged_prefill(q, k_pool, v_pool, tables, start, valid, *,
-                   block_size: int, bq: int, interpret: bool):
+def _paged_prefill(q, k_pool, v_pool, tables, start, valid, k_scale,
+                   v_scale, *, block_size: int, bq: int, interpret: bool):
     B, Tq, Hq, D = q.shape
     Hkv = k_pool.shape[1]
     n_blk = k_pool.shape[0] // block_size
@@ -85,16 +93,21 @@ def _paged_prefill(q, k_pool, v_pool, tables, start, valid, *,
         qr = jnp.pad(qr, ((0, 0), (0, 0), (0, pad_r), (0, 0)))
     kp = k_pool.reshape(n_blk, block_size, Hkv, D).transpose(0, 2, 1, 3)
     vp = v_pool.reshape(n_blk, block_size, Hkv, D).transpose(0, 2, 1, 3)
+    ks = (None if k_scale is None
+          else _scale_pool_blocks(k_scale, n_blk, block_size))
+    vs = (None if v_scale is None
+          else _scale_pool_blocks(v_scale, n_blk, block_size))
     tbl = jnp.clip(tables, 0, n_blk - 1).astype(jnp.int32)
     out = paged_prefill_attention_kernel(
         qr, kp, vp, tbl, start.astype(jnp.int32), valid.astype(jnp.int32),
-        tq=Tq, bq=bq, interpret=interpret)
+        tq=Tq, bq=bq, k_scale=ks, v_scale=vs, interpret=interpret)
     out = out[:, :, :R].reshape(B, Hkv, G, Tq, D)
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, D)
 
 
 def paged_chunked_prefill_attention(q, k_pool, v_pool, tables, start, valid,
                                     *, block_size: int, bq: int = 128,
+                                    k_scale=None, v_scale=None,
                                     interpret: Optional[bool] = None):
     """Paged chunked-prefill attention with PER-ROW chunk geometry.
 
@@ -102,9 +115,11 @@ def paged_chunked_prefill_attention(q, k_pool, v_pool, tables, start, valid,
     k_pool/v_pool: [P, Hkv, D] with P = num_blocks * block_size;
     tables: int32 [B, NB]; start/valid: int32 [B] per-row absolute chunk
     offset and valid token count (valid == 1 rows are decode steps —
-    one call executes a whole mixed prefill+decode batch).
+    one call executes a whole mixed prefill+decode batch);
+    k_scale/v_scale: optional [P, Hkv] f32 per-token scales for int8
+    pools (the kernel dequantizes per DMA'd block).
     Returns [B, Tq, Hq, D]; rows/tokens beyond ``valid`` are garbage and
     must be discarded by the caller."""
     return _paged_prefill(q, k_pool, v_pool, tables, start, valid,
-                          block_size=block_size, bq=bq,
+                          k_scale, v_scale, block_size=block_size, bq=bq,
                           interpret=resolve_interpret(interpret))

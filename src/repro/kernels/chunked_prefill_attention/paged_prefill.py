@@ -28,9 +28,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(tbl_ref, start_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, bq: int, bs: int, tq: int,
-            n_blk: int, scale: float):
+def _kernel(tbl_ref, start_ref, valid_ref, q_ref, k_ref, v_ref, *rest,
+            bq: int, bs: int, tq: int, n_blk: int, scale: float,
+            quant: bool = False):
+    if quant:
+        # int8 pools ride with per-token scale blocks [bs, 1]: dequant
+        # happens here, on the one block already resident in VMEM
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     qb = pl.program_id(2)
     j = pl.program_id(3)
@@ -54,6 +60,9 @@ def _kernel(tbl_ref, start_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)       # [BQ, D]
         k = k_ref[0, 0].astype(jnp.float32)       # [bs, D]
         v = v_ref[0, 0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # [BQ, bs]
@@ -77,32 +86,43 @@ def _kernel(tbl_ref, start_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_prefill_attention_kernel(q, k_pool, v_pool, tables, start, valid,
                                    *, tq: int, bq: int = 128,
+                                   k_scale=None, v_scale=None,
                                    interpret: bool = True):
     """q: [B, Hkv, R, D] with R = G*Tq (g-major rows);
     k_pool/v_pool: [num_blocks, Hkv, bs, D]; tables: int32 [B, NB]
     (clamped into range); start/valid: int32 [B] per-row chunk offset
-    and valid token count.  Returns [B, Hkv, R, D]."""
+    and valid token count; k_scale/v_scale: optional
+    [num_blocks, Hkv, bs, 1] f32 per-token dequantization scales for
+    int8 pools.  Returns [B, Hkv, R, D]."""
     B, Hkv, R, D = q.shape
     bs = k_pool.shape[2]
     NB = tables.shape[1]
     bq = min(bq, R)
     assert R % bq == 0, (R, bq)
     n_qb = R // bq
+    quant = k_scale is not None
     kern = functools.partial(_kernel, bq=bq, bs=bs, tq=tq, n_blk=NB,
-                             scale=D ** -0.5)
+                             scale=D ** -0.5, quant=quant)
+    kv_spec = pl.BlockSpec((1, 1, bs, D),
+                           lambda b, h, qb, j, tbl, st, vl:
+                           (tbl[b, j], h, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, D),
+                     lambda b, h, qb, j, tbl, st, vl: (b, h, qb, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    args = [tables, start, valid, q, k_pool, v_pool]
+    if quant:
+        sc_spec = pl.BlockSpec((1, 1, bs, 1),
+                               lambda b, h, qb, j, tbl, st, vl:
+                               (tbl[b, j], h, 0, 0))
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, Hkv, n_qb, NB),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, D),
-                         lambda b, h, qb, j, tbl, st, vl: (b, h, qb, 0)),
-            pl.BlockSpec((1, 1, bs, D),
-                         lambda b, h, qb, j, tbl, st, vl:
-                         (tbl[b, j], h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, D),
-                         lambda b, h, qb, j, tbl, st, vl:
-                         (tbl[b, j], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bq, D),
                                lambda b, h, qb, j, tbl, st, vl:
                                (b, h, qb, 0)),
@@ -117,4 +137,4 @@ def paged_prefill_attention_kernel(q, k_pool, v_pool, tables, start, valid,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, R, D), q.dtype),
         interpret=interpret,
-    )(tables, start, valid, q, k_pool, v_pool)
+    )(*args)

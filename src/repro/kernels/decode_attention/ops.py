@@ -51,9 +51,17 @@ def decode_attention(q, k, v, lengths, *, bk: int = 512,
                              interpret=resolve_interpret(interpret))
 
 
+def _scale_pool_blocks(scale_pool, n_blk: int, block_size: int):
+    """[P, Hkv] f32 scale pool -> [n_blk, Hkv, bs, 1] per-block DMA
+    layout (mirrors the KV pool reshape)."""
+    Hkv = scale_pool.shape[1]
+    return (scale_pool.reshape(n_blk, block_size, Hkv)
+            .transpose(0, 2, 1)[..., None])
+
+
 @functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
-def _paged_decode(q, k_pool, v_pool, tables, lengths, *, block_size: int,
-                  interpret: bool):
+def _paged_decode(q, k_pool, v_pool, tables, lengths, k_scale, v_scale, *,
+                  block_size: int, interpret: bool):
     B, Hq, D = q.shape
     Hkv = k_pool.shape[1]
     n_blk = k_pool.shape[0] // block_size
@@ -65,24 +73,31 @@ def _paged_decode(q, k_pool, v_pool, tables, lengths, *, block_size: int,
     # pool [P, Hkv, D] -> [n_blk, Hkv, bs, D] for per-block DMA
     kp = k_pool.reshape(n_blk, block_size, Hkv, D).transpose(0, 2, 1, 3)
     vp = v_pool.reshape(n_blk, block_size, Hkv, D).transpose(0, 2, 1, 3)
+    ks = (None if k_scale is None
+          else _scale_pool_blocks(k_scale, n_blk, block_size))
+    vs = (None if v_scale is None
+          else _scale_pool_blocks(v_scale, n_blk, block_size))
     # unused table entries (-1) are clamped: the kernel masks them via
     # ``lengths`` before any FLOP, so the DMA target is irrelevant
     tbl = jnp.clip(tables, 0, n_blk - 1).astype(jnp.int32)
     out = paged_decode_attention_kernel(
-        qg, kp, vp, tbl, lengths.astype(jnp.int32), interpret=interpret)
+        qg, kp, vp, tbl, lengths.astype(jnp.int32), k_scale=ks, v_scale=vs,
+        interpret=interpret)
     return out[:, :, :G].reshape(B, Hq, D)
 
 
 def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,
-                           block_size: int,
+                           block_size: int, k_scale=None, v_scale=None,
                            interpret: Optional[bool] = None):
     """Paged flash-decode: q [B, Hq, D] attends over KV held in a
     physical block pool through per-sequence block tables.
 
     k_pool/v_pool: [P, Hkv, D] with P = num_blocks * block_size (flat
     token axis, block-major); tables: int32 [B, NB] (entries < 0 are
-    unallocated); lengths: int32 [B] context lengths.
+    unallocated); lengths: int32 [B] context lengths; k_scale/v_scale:
+    optional [P, Hkv] f32 per-token scales for int8 pools (the kernel
+    dequantizes per DMA'd block).
     Returns [B, Hq, D]."""
     return _paged_decode(q, k_pool, v_pool, tables, lengths,
-                         block_size=block_size,
+                         k_scale, v_scale, block_size=block_size,
                          interpret=resolve_interpret(interpret))

@@ -26,8 +26,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, bs: int, n_blk: int, scale: float):
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest, bs: int,
+            n_blk: int, scale: float, quant: bool = False):
+    if quant:
+        # int8 pools ride with per-token scale blocks [bs, 1]: dequant
+        # happens here, on the one block already resident in VMEM
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -45,6 +51,9 @@ def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)              # [G', D]
         k = k_ref[0, 0].astype(jnp.float32)              # [bs, D]
         v = v_ref[0, 0].astype(jnp.float32)
+        if quant:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # [G', bs]
@@ -67,28 +76,41 @@ def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_decode_attention_kernel(q, k_pool, v_pool, tables, lengths, *,
+                                  k_scale=None, v_scale=None,
                                   interpret: bool = True):
     """q: [B, Hkv, G', D] (G' = padded group size);
     k_pool/v_pool: [num_blocks, Hkv, bs, D] physical block pools;
     tables: int32 [B, NB] block tables (entries clamped into range —
     out-of-context entries are masked by ``lengths``);
-    lengths: int32 [B] per-sequence context lengths.
+    lengths: int32 [B] per-sequence context lengths;
+    k_scale/v_scale: optional [num_blocks, Hkv, bs, 1] f32 per-token
+    dequantization scales for int8 pools (DMA'd per block through the
+    same table dereference as the KV they scale).
 
     Returns [B, Hkv, G', D]."""
     B, Hkv, Gp, D = q.shape
     bs = k_pool.shape[2]
     NB = tables.shape[1]
-    kern = functools.partial(_kernel, bs=bs, n_blk=NB, scale=D ** -0.5)
+    quant = k_scale is not None
+    kern = functools.partial(_kernel, bs=bs, n_blk=NB, scale=D ** -0.5,
+                             quant=quant)
+    kv_spec = pl.BlockSpec((1, 1, bs, D),
+                           lambda b, h, j, tbl, ln: (tbl[b, j], h, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, Gp, D), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    args = [tables, lengths, q, k_pool, v_pool]
+    if quant:
+        sc_spec = pl.BlockSpec((1, 1, bs, 1),
+                               lambda b, h, j, tbl, ln: (tbl[b, j], h, 0, 0))
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, NB),
-        in_specs=[
-            pl.BlockSpec((1, 1, Gp, D), lambda b, h, j, tbl, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, D),
-                         lambda b, h, j, tbl, ln: (tbl[b, j], h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, D),
-                         lambda b, h, j, tbl, ln: (tbl[b, j], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, Gp, D),
                                lambda b, h, j, tbl, ln: (b, h, 0, 0)),
         scratch_shapes=[
@@ -102,4 +124,4 @@ def paged_decode_attention_kernel(q, k_pool, v_pool, tables, lengths, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, Gp, D), q.dtype),
         interpret=interpret,
-    )(tables, lengths, q, k_pool, v_pool)
+    )(*args)

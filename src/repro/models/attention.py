@@ -123,6 +123,18 @@ def ring_slot_positions(write_end, capacity: int):
     return jnp.where((a >= 0) & (write_end[:, None] > 0), a, -1)
 
 
+def quantize_int8(x):
+    """Symmetric per-token int8 KV quantization: x [..., D] ->
+    (q int8 [..., D], scale f32 [...]) with ``x ~= q * scale``.  The
+    scale is amax/127 per (token, kv head); all-zero tokens (fresh pool
+    slots, padding) get scale 1 so dequantization is exact zero."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
 def paged_write(cache_k, cache_v, k_new, v_new, positions, tables,
                 block_size: int, valid_len=None):
     """Scatter [B,T] new KV into a physical block pool.
@@ -278,15 +290,27 @@ def _paged_attention(p, cfg, x, q, k, v, positions, cache, block_tables,
     derive from absolute positions, exactly as the dense path."""
     B, T, _ = x.shape
     tables, bs = block_tables
+    quant = "k_scale" in cache
+    if quant:
+        # int8 tier: quantize the chunk once at write time; scales live
+        # in sibling [P, Hkv] pools addressed by the same destinations
+        k, ks = quantize_int8(k)
+        v, vs = quantize_int8(v)
+        cks, cvs = paged_write(cache["k_scale"], cache["v_scale"], ks, vs,
+                               positions, tables, bs, valid_len)
     ck, cv = paged_write(cache["k"], cache["v"], k, v, positions, tables,
                          bs, valid_len)
+    new_cache = ({"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+                 if quant else {"k": ck, "v": cv})
     if _USE_KERNELS:
+        scales = dict(k_scale=cks, v_scale=cvs) if quant else {}
         if T == 1:
             from repro.kernels.decode_attention.ops import (
                 paged_decode_attention)
             o = paged_decode_attention(
                 q[:, 0], ck, cv, tables,
-                (positions[:, -1] + 1).astype(jnp.int32), block_size=bs)
+                (positions[:, -1] + 1).astype(jnp.int32), block_size=bs,
+                **scales)
             o = o[:, None]
         else:
             from repro.kernels.chunked_prefill_attention.ops import (
@@ -295,16 +319,21 @@ def _paged_attention(p, cfg, x, q, k, v, positions, cache, block_tables,
                      else jnp.full((B,), T, jnp.int32))
             o = paged_chunked_prefill_attention(
                 q, ck, cv, tables, positions[:, 0].astype(jnp.int32),
-                valid.astype(jnp.int32), block_size=bs)
+                valid.astype(jnp.int32), block_size=bs, **scales)
         out = jnp.einsum("bte,ed->btd",
                          o.reshape(B, T, -1).astype(x.dtype), p["wo"])
-        return out, {"k": ck, "v": cv}
+        return out, new_cache
     kd, kv_pos = paged_gather(ck, tables, bs)
     vd, _ = paged_gather(cv, tables, bs)
+    if quant:
+        ksd, _ = paged_gather(cks, tables, bs)
+        vsd, _ = paged_gather(cvs, tables, bs)
+        kd = (kd.astype(jnp.float32) * ksd[..., None]).astype(q.dtype)
+        vd = (vd.astype(jnp.float32) * vsd[..., None]).astype(q.dtype)
     mask = causal_mask(positions, kv_pos)
     probs = _masked_softmax(_gqa_scores(q, kd), mask)
     out = _gqa_out(probs.astype(x.dtype), vd, p["wo"])
-    return out, {"k": ck, "v": cv}
+    return out, new_cache
 
 
 def init_cross_attention(key, cfg):

@@ -156,18 +156,26 @@ def abstract_cache(cfg, batch, max_seq, dtype=None, cross_len: int = 0):
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=None):
+                     dtype=None, quant: Optional[str] = None):
     """Physical block-pool KV cache: every attention layer's KV lives in
     one shared pool of ``num_blocks`` fixed-size token blocks instead of
     per-slot [B, max_seq] rows.  Leaves are [n_periods, P, Hkv, Dh] with
     P = num_blocks * block_size (flat token axis, block-major); rows
     address it through int32 block tables passed to ``forward``.
 
+    ``quant="int8"`` stores KV as symmetric per-token int8 with float32
+    scales in sibling ``k_scale``/``v_scale`` pools [n_periods, P, Hkv]
+    — roughly ``itemsize*Dh / (Dh + 4)`` x more resident tokens per HBM
+    byte; the attention read path dequantizes (jnp reference) or the
+    paged Pallas kernels fold the scale in per DMA'd block.
+
     Only full-cache global attention pages cleanly (ring-buffer windows
     and recurrent state have no per-token block identity), so every
     block type must be ATTN — the same gate as T-padded packing.
     """
-    dtype = dtype or cfg.param_dtype
+    if quant not in (None, "int8"):
+        raise ValueError(f"unsupported KV quantization {quant!r}")
+    dtype = jnp.int8 if quant == "int8" else (dtype or cfg.param_dtype)
     hkv, dh = cfg.num_kv_heads, cfg.head_dim
     P = num_blocks * block_size
     segs = []
@@ -179,6 +187,11 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                     f"paged KV cache requires all-ATTN segments, got {btype}")
             kv = {"k": jnp.zeros((seg.n_periods, P, hkv, dh), dtype),
                   "v": jnp.zeros((seg.n_periods, P, hkv, dh), dtype)}
+            if quant == "int8":
+                kv["k_scale"] = jnp.zeros((seg.n_periods, P, hkv),
+                                          jnp.float32)
+                kv["v_scale"] = jnp.zeros((seg.n_periods, P, hkv),
+                                          jnp.float32)
             pos_caches.append(kv)
         segs.append(tuple(pos_caches))
     return {"segments": tuple(segs)}

@@ -59,6 +59,14 @@ class ControllerConfig:
     # direction embargoed for this many epochs (local search with tabu —
     # prevents oscillation when neither chunk direction can win)
     tabu_epochs: int = 4
+    # ---- hot-prefix replication (off by default) -------------------
+    # every epoch, copy each instance's hottest matchable prefixes to
+    # the instance with the fewest local hits for them — cache-aware
+    # routing then spreads that traffic instead of pinning it
+    replicate: bool = False
+    replicate_max_paths: int = 2     # hot paths exported per source
+    replicate_min_hits: int = 3      # touch count before a path is hot
+    replicate_max_blocks: int = 64   # per-epoch block budget per source
 
 
 class SliderController:
@@ -66,6 +74,7 @@ class SliderController:
         self.cfg = cfg or ControllerConfig()
         self.loop = None
         self.moves: List[dict] = []      # chunk retunes + role flips
+        self.replications = 0            # hot-prefix transfers started
         self._next_epoch: Optional[float] = None
         self._hold_until = 0.0
         self._pending_eval: Optional[dict] = None   # last chunk move
@@ -128,6 +137,10 @@ class SliderController:
         ttft_bad = att_ttft is not None and att_ttft < low
         tpot_bad = att_tpot is not None and att_tpot < low
         self._evaluate_last_move(now, ttft_bad, tpot_bad)
+        if self.cfg.replicate:
+            # orthogonal to slider motion: replication never reconfigures
+            # roles, so it runs regardless of cooldown or staged flips
+            self._replicate_hot(now)
         if now < self._hold_until or self._flip_in_progress():
             return
         n_evidence = len(tele._first) + len(tele._fin)
@@ -163,6 +176,42 @@ class SliderController:
 
     def _tabued(self, direction: str, now: float) -> bool:
         return now < self._tabu.get("sd_" + direction, 0.0)
+
+    # ------------------------------------------------------------------
+    def _replicate_hot(self, now: float):
+        """Epoch-boundary hot-prefix replication: for every instance's
+        hottest matchable prefixes (per-instance hit telemetry), ship
+        the blocks the COLDEST peer is missing.  Best effort and off the
+        critical path — the transfer lands through the cluster's
+        ordinary migration machinery, and a full destination pool admits
+        nothing rather than evicting its own content."""
+        cfg = self.cfg
+        cluster = self.loop.cluster
+        insts = [i for i in cluster.instances
+                 if i.prefix_cache is not None and not i.draining]
+        if len(insts) < 2:
+            return
+        for src in insts:
+            budget = cfg.replicate_max_blocks
+            for tokens, hits in src.hot_prefixes(cfg.replicate_max_paths,
+                                                 cfg.replicate_min_hits):
+                if budget <= 0:
+                    break
+                bs = src.prefix_cache.block_size
+                n = len(tokens) // bs
+
+                def depth(inst):
+                    return len(inst.prefix_cache.tree.match(
+                        tokens, n, touch=False))
+
+                dst = min((i for i in insts if i is not src), key=depth)
+                have = depth(dst)
+                if have >= n:
+                    continue          # path already everywhere it fits
+                ship = tokens[:min(n, have + budget) * bs]
+                if cluster.replicate_prefix(src, dst, ship, now):
+                    budget -= len(ship) // bs
+                    self.replications += 1
 
     # ------------------------------------------------------------------
     def _more_prefill(self, now: float, att: float):

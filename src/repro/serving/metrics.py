@@ -37,6 +37,12 @@ class TelemetryWindow:
         self._tokens: deque = deque()    # (t,)
         self._fin: deque = deque()       # (t, tpot | None, slo_ok)
         self._rej: deque = deque()       # (t,)
+        # time origin for rate denominators: set explicitly (the serving
+        # loop anchors at its start time) or lazily at the first event.
+        # Without it, a window created at wall/virtual time T0 > 0 would
+        # divide its first rates by min(window, now) — a span covering
+        # time the window never observed
+        self._anchor: Optional[float] = None
         # lifetime counters
         self.total_first = 0
         self.total_tokens = 0
@@ -47,7 +53,21 @@ class TelemetryWindow:
     # ------------------------------------------------------------------
     # event ingestion (wired to Instance.token_sink / Cluster callbacks)
     # ------------------------------------------------------------------
+    def anchor(self, t: float):
+        """Pin the window's time origin (idempotent: first call wins).
+        Rates report per second OBSERVED, not per second since epoch."""
+        if self._anchor is None:
+            self._anchor = t
+
+    def _span(self, now: float) -> float:
+        """Seconds the window actually covers at ``now``: capped by the
+        window length AND by how long the telemetry has existed."""
+        if self._anchor is None:
+            return 1e-9
+        return max(min(self.window, now - self._anchor), 1e-9)
+
     def on_token(self, req: Request, t: float):
+        self.anchor(t)
         self._tokens.append((t,))
         self.total_tokens += 1
         if req.output_len == 1:          # this token WAS the first token
@@ -55,12 +75,14 @@ class TelemetryWindow:
             self.total_first += 1
 
     def on_finish(self, req: Request, t: float):
+        self.anchor(t)
         ok = self.slo.satisfied(req)
         self._fin.append((t, req.tpot(), ok))
         self.total_finished += 1
         self.total_ok += int(ok)
 
     def on_reject(self, req: Request, t: float):
+        self.anchor(t)
         self._rej.append((t,))
         self.total_rejected += 1
 
@@ -93,8 +115,7 @@ class TelemetryWindow:
     def goodput(self, now: float) -> float:
         """SLO-attained finishes per second over the window."""
         self._trim(now)
-        span = min(self.window, now) or 1.0
-        return sum(ok for _, _, ok in self._fin) / span
+        return sum(ok for _, _, ok in self._fin) / self._span(now)
 
     def tpot_inflight_attainment(self, now: float,
                                  instances: Sequence) -> Optional[float]:
@@ -135,7 +156,7 @@ class TelemetryWindow:
     def snapshot(self, now: float,
                  instances: Sequence = ()) -> dict:
         self._trim(now)
-        span = min(self.window, now) or 1.0
+        span = self._span(now)
         snap = {
             "t": round(now, 3),
             "window_s": self.window,
@@ -164,7 +185,7 @@ class TelemetryWindow:
     def _instance_gauges(inst) -> dict:
         tail = inst.interference_log[-INTERFERENCE_TAIL:]
         mixed = [p for p, d in tail if d > 0]
-        return {
+        gauges = {
             "iid": inst.iid,
             "itype": inst.itype,
             "chunk": inst.chunk_size,
@@ -187,6 +208,14 @@ class TelemetryWindow:
             # prefill capacity
             "interference": (float(np.mean(mixed)) if mixed else 0.0),
         }
+        pc = getattr(inst, "prefix_cache", None)
+        if pc is not None and getattr(pc, "spill", None) is not None:
+            gauges["spilled_blocks"] = len(pc.spill)
+            gauges["spill_promoted_tokens"] = getattr(
+                inst, "spill_promoted_tokens", 0)
+        if getattr(inst, "replicas_in", 0):
+            gauges["replicated_blocks_in"] = inst.replicas_in
+        return gauges
 
 
 @dataclasses.dataclass

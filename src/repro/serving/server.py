@@ -78,6 +78,11 @@ class ServingLoop:
         self.slo = slo
         self.clock = clock or VirtualClock()
         self.telemetry = TelemetryWindow(slo, window=window)
+        # rates divide by seconds OBSERVED: the loop's start time is the
+        # window's origin (0.0 in simulation — unchanged spans there; a
+        # wall clock that starts mid-epoch no longer inflates the
+        # denominator of its first snapshots)
+        self.telemetry.anchor(cluster.now)
         self.log = MetricsLog()
         self.controller = controller
         self._arrivals: Optional[Iterator[Request]] = (

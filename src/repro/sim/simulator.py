@@ -28,6 +28,7 @@ class ServingConfig:
     block_size: int = 16
     max_ctx: int = 16384
     prefix_cache: bool = False        # shared-prefix KV cache per instance
+    spill_blocks: int = 0             # host-RAM spill tier per instance
 
 
 def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
@@ -42,7 +43,8 @@ def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
         # all instances identical: chunk = s_p everywhere, no D-heavy split
         s = Sliders(n_p=s.n_p + s.n_d, n_d=0, s_p=s.s_p, s_d=s.s_p)
         instances = build_instances(cost, s, factory, sc.hbm_blocks,
-                                    sc.block_size, sc.prefix_cache)
+                                    sc.block_size, sc.prefix_cache,
+                                    sc.spill_blocks)
         policy = PDAggregationPolicy(instances, cost, slo.ttft, slo.tpot,
                                      seed=seed)
     elif sc.policy == "disaggregation":
@@ -50,12 +52,14 @@ def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
         # D: chunk 0 (never prefills)
         s = Sliders(n_p=s.n_p, n_d=s.n_d, s_p=sc.max_ctx, s_d=0)
         instances = build_instances(cost, s, factory, sc.hbm_blocks,
-                                    sc.block_size, sc.prefix_cache)
+                                    sc.block_size, sc.prefix_cache,
+                                    sc.spill_blocks)
         policy = PDDisaggregationPolicy(instances, cost, slo.ttft, slo.tpot,
                                         seed=seed)
     elif sc.policy == "taichi":
         instances = build_instances(cost, s, factory, sc.hbm_blocks,
-                                    sc.block_size, sc.prefix_cache)
+                                    sc.block_size, sc.prefix_cache,
+                                    sc.spill_blocks)
         policy = TaiChiPolicy(instances, cost, slo.ttft, slo.tpot,
                               sliders=s, seed=seed, **(taichi_flags or {}))
     else:

@@ -1,0 +1,204 @@
+"""Live-engine multi-tier KV tests: int8 paged quantization parity vs
+the fp oracle, effective-capacity accounting, host-spill round trips
+with real tensor payloads, cross-format migration refusal, and
+replicated prefix blocks decoding token-exact on the destination."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.estimator import CostModel
+from repro.core.hw import InstanceSpec
+from repro.core.instance import D_HEAVY, Instance
+from repro.engine.engine import JaxExecutor, MigrationFormatError
+from repro.engine.paged import PagedKVCache
+from repro.engine.request import Request
+from repro.models import attention
+from repro.models import transformer as tf
+
+# slow tier: full JAX model/engine execution (run with `pytest -m slow`)
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    cost = CostModel(cfg, InstanceSpec(tp=1))
+    return cfg, params, cost
+
+
+def _make(cfg, params, cost, *, quant=None, spill=0, hbm_blocks=None,
+          chunk=32, n_slots=4):
+    ex = JaxExecutor(cfg, params, n_slots=n_slots, max_seq=256,
+                     batched=True, t_buckets=(8, 16, 32), paged=True,
+                     prefix_cache=True, hbm_blocks=hbm_blocks,
+                     kv_quant=quant, kv_spill_blocks=spill)
+    inst = Instance(0, D_HEAVY, chunk, cost, ex, hbm_blocks=512)
+    return ex, inst
+
+
+def _drive(inst, reqs, guard=300):
+    now, g = 0.0, 0
+    while not all(r.done() for r in reqs) and g < guard:
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        g += 1
+        for r in done:
+            inst.admit_decode(r)
+    assert all(r.done() for r in reqs)
+
+
+def _req(prompt, n_out=5):
+    return Request(prompt_len=len(prompt), max_new_tokens=n_out,
+                   hidden_output_len=n_out, prompt_tokens=list(prompt))
+
+
+# ---------------------------------------------------------------------------
+# int8 paged blocks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernels", [False, True], ids=["jnp", "pallas"])
+def test_int8_greedy_parity_vs_fp_oracle(setup, kernels):
+    """Per-token-scale int8 KV must not flip a single greedy token vs
+    the full-precision paged engine — on both the gather reference and
+    the Pallas kernel (interpret) decode/prefill paths."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(21)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in (11, 30, 46)]
+    prev = attention._USE_KERNELS
+    attention.use_kernels(kernels)
+    try:
+        def gen(quant):
+            ex, inst = _make(cfg, params, cost, quant=quant)
+            assert ex.kv.quant == quant
+            reqs = [_req(p, 6) for p in prompts]
+            for r in reqs:
+                inst.enqueue_prefill(r)
+            _drive(inst, reqs)
+            return [r.output_tokens for r in reqs]
+
+        assert gen("int8") == gen(None)
+    finally:
+        attention.use_kernels(prev)
+
+
+def test_int8_effective_capacity_ratio(setup):
+    """The point of quantizing: >=1.8x tokens per HBM byte (int8 + f32
+    per-token scales vs the fp pool at the model's own KV dtype)."""
+    cfg, params, cost = setup
+    fp = PagedKVCache.token_bytes_for(cfg)
+    q = PagedKVCache.token_bytes_for(cfg, quant="int8")
+    assert fp / q >= 1.8
+    ex, _ = _make(cfg, params, cost, quant="int8")
+    assert ex.kv.effective_capacity_ratio() == pytest.approx(fp / q)
+
+
+# ---------------------------------------------------------------------------
+# host spill tier with real tensor payloads
+# ---------------------------------------------------------------------------
+
+def test_spill_prefetch_decode_token_exact(setup):
+    """Evict a committed prefix out of a tiny HBM pool into host RAM,
+    promote it back on the next hit, and decode — tokens must match a
+    never-evicted run exactly (the payload round trip is lossless and
+    the promoted blocks land where the block table says they do)."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(22)
+    hot = list(rng.integers(1, cfg.vocab_size, size=64))      # 4 blocks
+    cold = list(rng.integers(1, cfg.vocab_size, size=128))    # 8 blocks
+
+    # control: ample pool, nothing ever evicted
+    ex0, inst0 = _make(cfg, params, cost)
+    ctl = _req(hot)
+    inst0.enqueue_prefill(ctl)
+    _drive(inst0, [ctl])
+
+    # pressured pool: 12 blocks = one 8-block admission short of two
+    ex, inst = _make(cfg, params, cost, spill=16, hbm_blocks=12)
+    pc = ex.prefix_cache_obj
+    a = _req(hot)
+    inst.enqueue_prefill(a)
+    _drive(inst, [a])
+    assert pc.match_tokens(hot + [0]) == 64       # committed + resident
+    b = _req(cold)                                # needs the whole pool
+    inst.enqueue_prefill(b)
+    _drive(inst, [b])
+    assert pc.spilled_blocks >= 4                 # hot prefix pushed out
+    assert pc.match_tokens(hot + [0]) == 0
+    c = _req(hot)
+    inst.enqueue_prefill(c)
+    _drive(inst, [c])
+    # admission prefetched from the host tier instead of recomputing
+    assert pc.spill.promoted >= 3
+    assert inst.spill_promoted_tokens >= 48
+    assert c.cached_prefix_len >= 48
+    assert c.output_tokens == a.output_tokens == ctl.output_tokens
+    # conservation held under the spill/promote churn
+    al = pc.allocator
+    assert al.free_blocks + al.cached_blocks + al.used_blocks == 12
+
+
+# ---------------------------------------------------------------------------
+# cross-format migration refusal
+# ---------------------------------------------------------------------------
+
+def test_migration_format_mismatch_raises(setup):
+    cfg, params, cost = setup
+    ex_q, inst_q = _make(cfg, params, cost, quant="int8")
+    ex_f, inst_f = _make(cfg, params, cost)
+    rng = np.random.default_rng(23)
+    req = _req(list(rng.integers(1, cfg.vocab_size, size=24)), 8)
+    inst_q.enqueue_prefill(req)
+    now = 0.0
+    while req.prefill_remaining > 0:
+        dur, _, _ = inst_q.run_iteration(now)
+        now += dur
+    inst_q.admit_decode(req)
+    for _ in range(2):
+        dur, _, _ = inst_q.run_iteration(now)
+        now += dur
+    state = inst_q.eject(req)
+    assert state["kv_format"] == "int8"
+    with pytest.raises(MigrationFormatError):
+        inst_f.inject(req, state)
+
+
+# ---------------------------------------------------------------------------
+# replication payloads decode token-exact on the destination
+# ---------------------------------------------------------------------------
+
+def test_replicated_prefix_blocks_decode_token_exact(setup):
+    cfg, params, cost = setup
+    rng = np.random.default_rng(24)
+    shared = list(rng.integers(1, cfg.vocab_size, size=48))   # 3 blocks
+    tail = list(rng.integers(1, cfg.vocab_size, size=13))
+
+    ex_src, inst_src = _make(cfg, params, cost)
+    warm = _req(shared + tail)
+    inst_src.enqueue_prefill(warm)
+    _drive(inst_src, [warm])
+    state = ex_src.export_prefix_blocks(shared)
+    assert state is not None and state["n_blocks"] == 3
+    assert state["kv_format"] == "fp"
+
+    ex_dst, inst_dst = _make(cfg, params, cost)
+    assert ex_dst.import_prefix_blocks(state) == 3
+    assert ex_dst.prefix_cache_obj.match_tokens(shared + [0]) == 48
+
+    # control for the destination's exact prompt, computed cache-free
+    ex0, inst0 = _make(cfg, params, cost)
+    probe0 = _req(shared + tail[:5])
+    inst0.enqueue_prefill(probe0)
+    _drive(inst0, [probe0])
+
+    probe = _req(shared + tail[:5])
+    inst_dst.enqueue_prefill(probe)
+    _drive(inst_dst, [probe])
+    assert probe.cached_prefix_len == 48          # replica actually used
+    assert probe.output_tokens == probe0.output_tokens
+    # format guard: an int8 destination refuses fp replica payloads
+    ex_q, _ = _make(cfg, params, cost, quant="int8")
+    with pytest.raises(MigrationFormatError):
+        ex_q.import_prefix_blocks(state)

@@ -1,0 +1,402 @@
+"""Multi-tier KV cache under memory pressure: host spill tier semantics,
+eviction->spill->prefetch promotion, tier conservation invariants,
+cross-instance hot-prefix replication, telemetry span anchoring, and the
+chunk->0 mid-chunk stranding fix."""
+import random
+
+import pytest
+
+from repro.cache import PrefixCache, chain_hashes
+from repro.cache.spill import HostSpillPool
+from repro.configs import get_config
+from repro.core.estimator import CostModel
+from repro.core.hw import InstanceSpec
+from repro.core.instance import D_HEAVY, P_HEAVY, Instance
+from repro.core.latency import SLO
+from repro.core.policies import Sliders
+from repro.engine.engine import SimExecutor
+from repro.engine.request import Request, State
+from repro.serving import (ControllerConfig, ServingLoop, SliderController,
+                           TelemetryWindow)
+from repro.sim.simulator import ServingConfig, build_cluster
+
+BS = 4
+BAL = SLO(ttft=1.5, tpot=0.030)
+
+
+# ---------------------------------------------------------------------------
+# host spill pool
+# ---------------------------------------------------------------------------
+
+def test_spill_pool_contiguity_holes_and_lru_drop():
+    sp = HostSpillPool(2, BS)
+    tokens = list(range(1, 13))                    # 3 full blocks
+    chains = list(chain_hashes(tokens, BS))
+    # leaf-first HBM eviction spills children BEFORE parents — out of
+    # chain order — and the flat tier must not care
+    sp.put(chains[2][0], chains[2][1], None)
+    sp.put(chains[1][0], chains[1][1], None)
+    run = sp.match_from(tokens, 1, touch=False)
+    assert [h for h, _ in run] == [chains[1][0], chains[2][0]]
+    # block 0 never spilled: a hole truncates the run to nothing
+    assert sp.match_from(tokens, 0, touch=False) == []
+    # stored tokens are verified: same chain walk, different content
+    other = tokens[:4] + [99, 98, 97, 96] + tokens[8:]
+    assert sp.match_from(other, 1, touch=False) == []
+    # overflow drops the OLDEST entry, truncating (not corrupting) runs
+    sp.put(chains[0][0], chains[0][1], None)
+    assert chains[2][0] not in sp
+    assert len(sp.match_from(tokens, 0, touch=False)) == 2
+    assert sp.stats()["dropped"] == 1
+    # take() removes and counts a promotion
+    sp.take(chains[0][0])
+    assert chains[0][0] not in sp and sp.promoted == 1
+
+
+def test_spill_pool_zero_capacity_accepts_nothing():
+    sp = HostSpillPool(0, BS)
+    chains = list(chain_hashes(range(1, 5), BS))
+    assert not sp.put(chains[0][0], chains[0][1], None)
+    assert len(sp) == 0 and sp.spilled == 0
+
+
+# ---------------------------------------------------------------------------
+# eviction -> spill -> prefetch promotion (bookkeeping tier)
+# ---------------------------------------------------------------------------
+
+def test_eviction_spills_and_prefetch_promotes():
+    pc = PrefixCache(num_blocks=4, block_size=BS, spill_blocks=8)
+    prompt = list(range(1, 17))                    # 4 full blocks
+    assert pc.acquire(1, prompt, 0, 16)
+    pc.commit(1, prompt)
+    pc.release(1)                                  # all 4 retained (LRU)
+    assert pc.match_tokens(prompt) == 12           # (16-1)//4*4
+    # a disjoint allocation evicts everything; the host tier catches it
+    assert pc.acquire(2, list(range(100, 116)), 0, 16)
+    assert pc.spilled_blocks == 4
+    assert pc.match_tokens(prompt) == 0            # gone from HBM...
+    assert pc.match_tokens_tiered(prompt) == 12    # ...but not from reach
+    pc.release(2)                                  # uncommitted: blocks free
+    promoted = pc.prefetch(prompt)
+    assert promoted == 12                          # hit cap: 3 of 4 blocks
+    assert pc.match_tokens(prompt) == 12           # resident again
+    assert pc.spill.promoted == 3
+    # conservation held throughout
+    a = pc.allocator
+    assert a.free_blocks + a.cached_blocks + a.used_blocks == 4
+
+
+def test_prefetch_extends_partial_hbm_prefix_only_contiguously():
+    pc = PrefixCache(num_blocks=8, block_size=BS, spill_blocks=8)
+    prompt = list(range(1, 33))                    # 8 blocks
+    assert pc.acquire(1, prompt, 0, 32)
+    pc.commit(1, prompt)
+    pc.release(1)
+    # evict the whole chain into the host tier
+    assert pc.acquire(2, list(range(100, 132)), 0, 32)
+    assert pc.spilled_blocks == 8
+    pc.release(2)
+    # drop one mid-chain entry from the host tier -> the promotion run
+    # must stop at the hole, not skip over it
+    hole = list(chain_hashes(prompt, BS))[2][0]
+    pc.spill.take(hole)
+    assert pc.prefetch(prompt) == 8                # blocks 0..1 only
+    assert pc.match_tokens(prompt) == 8
+
+
+def test_tiered_match_is_pure():
+    pc = PrefixCache(num_blocks=4, block_size=BS, spill_blocks=8)
+    prompt = list(range(1, 17))
+    assert pc.acquire(1, prompt, 0, 16)
+    pc.commit(1, prompt)
+    pc.release(1)
+    assert pc.acquire(2, list(range(100, 116)), 0, 16)
+    free = pc.allocator.free_blocks
+    spilled = pc.spilled_blocks
+    for _ in range(3):
+        assert pc.match_tokens_tiered(prompt) == 12
+    assert pc.allocator.free_blocks == free
+    assert pc.spilled_blocks == spilled
+
+
+# ---------------------------------------------------------------------------
+# tier conservation under interleaved lifecycle ops
+# ---------------------------------------------------------------------------
+
+_BASE = list(range(1, 33))
+PROMPTS = [
+    _BASE,                                         # 8 blocks
+    _BASE[:16] + list(range(50, 66)),              # shares 4 blocks
+    _BASE[:8] + list(range(70, 94)),               # shares 2 blocks
+    list(range(200, 224)),                         # disjoint, 6 blocks
+]
+TIER_OPS = ("acquire", "commit", "release", "prefetch")
+
+
+def run_tiered_ops(ops, num_blocks, spill_blocks):
+    pc = PrefixCache(num_blocks, BS, spill_blocks=spill_blocks)
+    a = pc.allocator
+    live = {}                                      # rid -> prompt
+    for op, rid, pi in ops:
+        prompt = PROMPTS[pi % len(PROMPTS)]
+        if op == "acquire":
+            if rid in live:
+                continue
+            hit = pc.match_tokens(prompt)
+            total = len(prompt) + 2 * BS
+            if pc.can_acquire(prompt, hit, total):
+                assert pc.acquire(rid, prompt, hit, total)
+                live[rid] = prompt
+        elif op == "commit":
+            if rid in live:
+                pc.commit(rid, live[rid])
+        elif op == "release":
+            if rid in live:
+                live.pop(rid)
+                pc.release(rid)
+        else:                                      # prefetch
+            pc.prefetch(prompt)
+        # HBM conservation after EVERY op, spill or no spill
+        assert a.free_blocks + a.cached_blocks + a.used_blocks \
+            == num_blocks
+        for r in live:
+            assert a.holds(r)
+        # host-tier conservation: everything ever accepted is still
+        # resident, was promoted back, or was LRU-dropped
+        if pc.spill is not None:
+            s = pc.spill.stats()
+            assert s["spilled"] == (s["resident"] + s["promoted"]
+                                    + s["dropped"])
+            assert s["resident"] <= spill_blocks
+        # the tiered view never reports less than HBM alone
+        assert pc.match_tokens_tiered(prompt) >= pc.match_tokens(prompt)
+    for rid in list(live):
+        pc.release(rid)
+    assert a.used_blocks == 0
+    assert a.free_blocks + a.cached_blocks == num_blocks
+
+
+def test_tier_conservation_interleaved_seeded():
+    for seed in range(30):
+        rng = random.Random(seed)
+        ops = [(rng.choice(TIER_OPS), rng.randrange(6), rng.randrange(8))
+               for _ in range(120)]
+        run_tiered_ops(ops, num_blocks=rng.randrange(4, 24),
+                       spill_blocks=rng.choice([0, 2, 8, 32]))
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                # seeded smoke test above still runs
+    st = None
+
+if st is not None:
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(TIER_OPS), st.integers(0, 7),
+                  st.integers(0, 7)),
+        min_size=1, max_size=150),
+        num_blocks=st.integers(4, 32), spill_blocks=st.integers(0, 32))
+    @settings(max_examples=150, deadline=None)
+    def test_tier_conservation_invariants(ops, num_blocks, spill_blocks):
+        run_tiered_ops(ops, num_blocks, spill_blocks)
+
+
+# ---------------------------------------------------------------------------
+# telemetry span anchoring
+# ---------------------------------------------------------------------------
+
+def _finished_request(t0, ttft=0.2, tpot=0.02):
+    r = Request(prompt_len=10, max_new_tokens=2, arrival=t0)
+    r.record_token(t0 + ttft)
+    r.record_token(t0 + ttft + tpot)
+    return r
+
+
+def test_telemetry_rates_divide_by_observed_span():
+    """A window anchored at a nonzero start (wall clock, mid-run attach)
+    must report rates per second OBSERVED — not per second since the
+    time origin, which deflated early goodput by up to window/elapsed."""
+    tw = TelemetryWindow(BAL, window=10.0)
+    tw.anchor(100.0)
+    r = _finished_request(100.0)
+    tw.on_token(r, 100.2)
+    tw.on_token(r, 100.22)
+    tw.on_finish(r, 100.22)
+    assert BAL.satisfied(r)
+    assert tw.goodput(100.5) == pytest.approx(1 / 0.5)
+    snap = tw.snapshot(100.5)
+    assert snap["throughput_tok_s"] == pytest.approx(2 / 0.5)
+    # pre-fix behavior: span = min(window, now) = 10.0 -> 0.1 and 0.2
+
+
+def test_telemetry_anchor_is_lazy_and_idempotent():
+    tw = TelemetryWindow(BAL, window=10.0)
+    assert tw.goodput(123.0) == 0.0                # no events, no anchor
+    r = _finished_request(50.0)
+    tw.on_token(r, 50.2)                           # first event anchors
+    tw.on_finish(r, 50.22)
+    tw.anchor(0.0)                                 # later call: no-op
+    assert tw.goodput(52.2) == pytest.approx(1 / 2.0)
+
+
+def test_telemetry_virtual_clock_spans_unchanged():
+    """Simulation runs anchor at 0.0 — spans (and every existing
+    benchmark number) must match the old min(window, now) exactly."""
+    tw = TelemetryWindow(BAL, window=10.0)
+    tw.anchor(0.0)
+    r = _finished_request(0.0)
+    tw.on_token(r, 0.2)
+    tw.on_token(r, 0.22)
+    tw.on_finish(r, 0.22)
+    assert tw.goodput(5.0) == pytest.approx(1 / 5.0)
+    assert tw.goodput(40.0) == 0.0                 # slid out of the window
+
+
+# ---------------------------------------------------------------------------
+# chunk -> 0 mid-chunk stranding
+# ---------------------------------------------------------------------------
+
+def _sim_instance(chunk=16, blocks=512):
+    cost = CostModel(get_config("qwen2.5-14b"), InstanceSpec(tp=4))
+    return Instance(0, D_HEAVY, chunk, cost, SimExecutor(),
+                    hbm_blocks=blocks, block_size=BS)
+
+
+def test_chunk_zero_does_not_strand_admitted_prefill():
+    """set_chunks(..., 0) reroutes QUEUED work, but a mid-chunk prefill
+    already holds blocks and must keep flowing to completion."""
+    inst = _sim_instance(chunk=16)
+    req = Request(prompt_len=64, max_new_tokens=2, hidden_output_len=2,
+                  prompt_tokens=list(range(1, 65)))
+    inst.enqueue_prefill(req)
+    now, _, _ = inst.run_iteration(0.0)            # 16 of 64 tokens in
+    assert inst.allocator.holds(req.rid)
+    assert 0 < req.prefill_remaining < 64
+    inst.chunk_size = 0                            # slider zeroed mid-chunk
+    guard = 0
+    while req.prefill_remaining > 0 and guard < 20:
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        guard += 1
+    assert req.prefill_remaining == 0, "admitted prefill stranded"
+    assert req.first_token_time is not None
+
+
+def test_chunk_zero_with_decode_population_still_finishes_head():
+    """The regression also bites when chunk_size minus the decode batch
+    width zeroes the budget: the admitted head must still progress."""
+    inst = _sim_instance(chunk=8)
+    dec = [Request(prompt_len=8, max_new_tokens=30, hidden_output_len=30,
+                   prompt_tokens=list(range(100 + 10 * i, 108 + 10 * i)))
+           for i in range(8)]
+    for r in dec:
+        inst.enqueue_prefill(r)
+    pre = Request(prompt_len=40, max_new_tokens=2, hidden_output_len=2,
+                  prompt_tokens=list(range(1, 41)))
+    now = 0.0
+    for _ in range(8):                             # prefill the decoders
+        dur, done, _ = inst.run_iteration(now)
+        now += dur
+        for r in done:
+            inst.admit_decode(r)
+    inst.enqueue_prefill(pre)
+    guard = 0
+    while pre.prefill_remaining > 0 and guard < 300:
+        dur, done, _ = inst.run_iteration(now)
+        now += dur or 0.01
+        guard += 1
+        for r in done:
+            inst.admit_decode(r)
+    assert pre.prefill_remaining == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-instance hot-prefix replication
+# ---------------------------------------------------------------------------
+
+def _hot_prefix_requests(base, n, spacing=0.5, tail=64):
+    return [Request(prompt_len=len(base) + tail, max_new_tokens=4,
+                    hidden_output_len=4,
+                    prompt_tokens=base + list(range(10_000 + 97 * i,
+                                                    10_000 + 97 * i + tail)),
+                    arrival=spacing * i)
+            for i in range(n)]
+
+
+def test_replication_spreads_hot_prefix_across_instances():
+    sc = ServingConfig(policy="taichi", sliders=Sliders(1, 1, 512, 256),
+                       hbm_blocks=1024, block_size=16, prefix_cache=True)
+    cluster = build_cluster(sc, BAL)
+    ctl = SliderController(ControllerConfig(
+        replicate=True, replicate_min_hits=2, replicate_max_paths=2,
+        replicate_max_blocks=64))
+    loop = ServingLoop(cluster, BAL, controller=ctl)
+    base = list(range(1, 257))                     # 16 hot blocks
+    for r in _hot_prefix_requests(base, 14):
+        loop.submit(r)
+    loop.run()
+    assert all(r.state == State.FINISHED for r in loop.requests)
+    assert ctl.replications > 0
+    assert cluster.replication_count == ctl.replications
+    assert cluster.replication_bytes > 0
+    probe = base + [9999]
+    holders = [i for i in cluster.instances
+               if i.prefix_cache.match_tokens(probe) > 0]
+    assert len(holders) == len(cluster.instances), \
+        "hot prefix should be resident on every instance"
+    assert sum(i.replicas_in for i in cluster.instances) > 0
+
+
+def test_replication_off_by_default_and_single_instance_noop():
+    sc = ServingConfig(policy="taichi", sliders=Sliders(1, 1, 512, 256),
+                       hbm_blocks=1024, block_size=16, prefix_cache=True)
+    cluster = build_cluster(sc, BAL)
+    ctl = SliderController(ControllerConfig())     # replicate defaults off
+    loop = ServingLoop(cluster, BAL, controller=ctl)
+    for r in _hot_prefix_requests(list(range(1, 257)), 10):
+        loop.submit(r)
+    loop.run()
+    assert ctl.replications == 0
+    assert cluster.replication_count == 0
+
+
+def test_replica_admission_never_evicts_local_content():
+    pc = PrefixCache(num_blocks=4, block_size=BS)
+    local = list(range(1, 17))
+    assert pc.acquire(1, local, 0, 16)
+    pc.commit(1, local)
+    pc.release(1)                                  # 4 cached local blocks
+    foreign = list(range(100, 132))
+    res = pc.admit_replica(foreign, 8)
+    assert res is None                             # zero free: nothing lands
+    assert pc.match_tokens(local) == 12            # local cache untouched
+
+
+def test_flip_during_horizon_with_replication_in_flight():
+    """A drain-and-flip staged while a replication transfer is queued
+    and decode horizons are in flight must land cleanly: transfers
+    deliver, no request strands, no mid-horizon state extraction."""
+    sc = ServingConfig(policy="taichi", sliders=Sliders(1, 1, 512, 256),
+                       hbm_blocks=1024, block_size=16, prefix_cache=True)
+    cluster = build_cluster(sc, BAL, async_exec=True)
+    cluster.set_horizon(8)
+    loop = ServingLoop(cluster, BAL)
+    base = list(range(1, 257))
+    reqs = _hot_prefix_requests(base, 10, spacing=0.2, tail=64)
+    for r in reqs:
+        loop.submit(r)
+    loop.run(until=2.0)
+    insts = cluster.instances
+    src = max(insts, key=lambda i: i.prefix_cache.match_tokens(base + [0]))
+    assert src.prefix_cache.match_tokens(base + [0]) > 0
+    dst = next(i for i in insts if i is not src)
+    assert cluster.replicate_prefix(src, dst, base)
+    # flip the replication DESTINATION while the payload is in flight
+    assert loop.flip_role(dst, P_HEAVY if dst.itype == D_HEAVY else D_HEAVY,
+                          512)
+    loop.run()
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert cluster.replication_count == 1
+    assert dst.pending_flip is None                # flip landed
+    assert dst.prefix_cache.match_tokens(base + [0]) > 0

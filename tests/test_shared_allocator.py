@@ -122,6 +122,88 @@ def test_shared_block_freed_only_at_refcount_zero():
     assert a.free_blocks == 6
 
 
+# ---------------------------------------------------------------------------
+# pick_eviction is advisory: hostile callbacks must never corrupt the pool
+# ---------------------------------------------------------------------------
+
+def _exhaust_then_cache(a, rid=1):
+    """Fill the pool via one request, register everything, release —
+    every block is now cached (refcount 0, retained)."""
+    a.allocate(rid, a.num_blocks * a.block_size)
+    for b in a.owned(rid):
+        a.register(b)
+    a.free(rid)
+
+
+@pytest.mark.parametrize("victim_fn", [
+    lambda a: None,                         # no opinion
+    lambda a: 10 ** 9,                      # unknown bid
+    lambda a: -1,                           # nonsense bid
+    lambda a: next(iter(a._refcount), None),   # REFERENCED block
+], ids=["none", "unknown", "negative", "referenced"])
+def test_take_fresh_survives_hostile_pick_eviction(victim_fn):
+    a = SharedBlockAllocator(4, block_size=4)
+    a.pick_eviction = lambda: victim_fn(a)
+    _exhaust_then_cache(a)
+    # hold one block so the "referenced" callback has a live target
+    held = next(iter(a._cached))
+    a.pin(held)
+    a.allocate(2, 8)                        # forces two demand evictions
+    assert held in a._refcount              # pinned block never reclaimed
+    assert a.free_blocks + a.cached_blocks + a.used_blocks == 4
+    assert a.used_blocks == 3               # 2 allocated + 1 pinned
+    a.unpin(held)
+    a.free(2)
+    assert a.free_blocks + a.cached_blocks == 4
+
+
+def test_pick_eviction_repeating_stale_victim_falls_back_to_lru():
+    """A callback that keeps nominating the SAME bid (stale after its
+    first eviction) must not double-free it or spin."""
+    a = SharedBlockAllocator(4, block_size=4)
+    _exhaust_then_cache(a)
+    stale = next(iter(a._cached))
+    a.pick_eviction = lambda: stale
+    a.allocate(2, 16)                       # 4 evictions, 3 with stale hint
+    assert a.used_blocks == 4 and a.cached_blocks == 0
+    assert len(set(a.owned(2))) == 4        # no bid handed out twice
+    assert a.eviction_count == 4
+
+
+def test_allocate_rolls_back_partial_increfs_on_stale_shared_bid():
+    """A shared bid evicted between the caller's peek and allocate must
+    not leak references on the bids incref'd before it."""
+    a = SharedBlockAllocator(8, block_size=4)
+    a.allocate(1, 12)
+    for b in a.owned(1):
+        a.register(b)
+    pfx = a.owned(1)
+    a.free(1)                               # all three cached
+    a.evict(pfx[1])                         # middle of the prefix vanishes
+    with pytest.raises(KeyError):
+        a.allocate(2, 16, shared=pfx)
+    # the first incref was rolled back: block 0 is cached again, not live
+    assert a.refcount(pfx[0]) == 0
+    assert a.used_blocks == 0
+    assert a.free_blocks + a.cached_blocks == 8
+    # and the allocator still works end to end
+    a.allocate(3, 32)
+    assert a.used_blocks == 8
+
+
+def test_adopt_cached_lands_registered_and_evictable():
+    a = SharedBlockAllocator(2, block_size=4)
+    bid = a.adopt_cached()
+    assert a.is_registered(bid) and a.refcount(bid) == 0
+    assert a.cached_blocks == 1 and a.free_blocks == 1
+    a.pin(bid)
+    with pytest.raises(ValueError):
+        a.evict(bid)                        # pinned: not reclaimable
+    a.unpin(bid)
+    a.evict(bid)
+    assert a.free_blocks == 2
+
+
 try:
     import hypothesis.strategies as st
     from hypothesis import given, settings
