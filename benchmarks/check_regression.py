@@ -23,6 +23,11 @@ multi-tier KV pressure bench's recorded acceptance floors from
 spill tier's TTFT win over drop-and-recompute, and the tier stack's
 goodput gain.
 
+With ``--frontend`` (or ``--frontend-only``) it re-checks the HTTP/SSE
+front-end smoke bench (``benchmarks/out/frontend_bench.json``): the
+socket-level streamed tokens/s floor and the per-token wire-overhead
+ceiling.
+
 Usage:  python benchmarks/check_regression.py [--fresh path] [--baseline path]
 """
 from __future__ import annotations
@@ -102,6 +107,42 @@ def check_kv_pressure(path: str) -> int:
     return 0
 
 
+def check_frontend(path: str) -> int:
+    """Gate over benchmarks/out/frontend_bench.json: the socket-level
+    smoke run must clear its recorded streamed-rate floor and keep the
+    per-token wire overhead (engine event -> SSE frame on the socket)
+    under its ceiling.  Catches string work leaking back into the token
+    hot path or a blocking writer, not runner jitter."""
+    with open(path) as f:
+        res = json.load(f)
+    acc = res["acceptance"]
+    tok_s = res["streamed_tokens_per_s"]
+    wire_p95 = (res.get("wire") or {}).get("p95_ms")
+    failures = []
+    status = "ok" if tok_s >= acc["tokens_per_s_floor"] else "REGRESSION"
+    print(f"{'streamed_tok_s':>26}: {tok_s:.2f} "
+          f"(floor {acc['tokens_per_s_floor']}) {status}")
+    if tok_s < acc["tokens_per_s_floor"]:
+        failures.append(f"streamed tokens/s {tok_s:.2f} < floor "
+                        f"{acc['tokens_per_s_floor']}")
+    if wire_p95 is None:
+        failures.append("no wire spans recorded — the streaming path "
+                        "never reported to telemetry")
+    else:
+        status = ("ok" if wire_p95 <= acc["wire_p95_ms_ceil"]
+                  else "REGRESSION")
+        print(f"{'wire_p95_ms':>26}: {wire_p95:.2f} "
+              f"(ceiling {acc['wire_p95_ms_ceil']}) {status}")
+        if wire_p95 > acc["wire_p95_ms_ceil"]:
+            failures.append(f"wire p95 {wire_p95:.2f}ms > ceiling "
+                            f"{acc['wire_p95_ms_ceil']}ms")
+    if failures:
+        print("\nFAIL:\n  " + "\n  ".join(failures))
+        return 1
+    print("\nOK: front-end streaming floors hold")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh",
@@ -117,13 +158,21 @@ def main():
              "(skips the engine check when given alone with --kv-only)")
     ap.add_argument("--kv-only", action="store_true",
                     help="gate only the KV pressure JSON")
+    ap.add_argument("--frontend", nargs="?", const=os.path.join(
+        HERE, "out", "frontend_bench.json"),
+        help="also gate the HTTP/SSE front-end smoke bench JSON")
+    ap.add_argument("--frontend-only", action="store_true",
+                    help="gate only the front-end smoke JSON")
     args = ap.parse_args()
     rc = 0
-    if not args.kv_only:
+    if not (args.kv_only or args.frontend_only):
         rc |= check(args.fresh, args.baseline, args.tol)
     if args.kv or args.kv_only:
         rc |= check_kv_pressure(args.kv or os.path.join(
             HERE, "out", "kv_pressure.json"))
+    if args.frontend or args.frontend_only:
+        rc |= check_frontend(args.frontend or os.path.join(
+            HERE, "out", "frontend_bench.json"))
     sys.exit(rc)
 
 

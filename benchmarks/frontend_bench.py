@@ -1,0 +1,148 @@
+"""Network front-end smoke benchmark: socket-level streaming throughput
+and per-token wire overhead.
+
+Boots the full deployable stack — ``FrontendServer`` (asyncio HTTP/SSE)
+over the live JAX engine (reduced smollm config, CPU-runnable) with the
+multi-process detokenizer pipeline and the router-side admission queue —
+then drives ``N_CLIENTS`` concurrent streaming ``/v1/completions``
+clients over real loopback sockets and measures:
+
+* **streamed tokens/s** — SSE deltas received across all clients per
+  wall second (the end-to-end serving rate a user sees);
+* **wire overhead** — engine token event -> SSE frame on the socket
+  (``TelemetryWindow.record_wire`` spans), p50/p95/mean ms: the cost of
+  the pipeline + asyncio hop, NOT of model compute;
+* **client TTFB** — request sent -> first SSE byte, p50/p95.
+
+Emits CSV rows via benchmarks.common.emit and JSON to
+benchmarks/out/frontend_bench.json; the slow-CI gate
+(benchmarks/check_regression.py --frontend) re-checks the recorded
+floors: a minimum streamed rate and a ceiling on per-token wire
+overhead.  Both are deliberately loose — they catch structural
+regressions (string work leaking back into the token hot path, a
+blocking writer), not runner jitter.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_json
+
+N_CLIENTS = 16
+MAX_TOKENS = 16
+TOK_WORKERS = 2
+
+#: acceptance floors re-checked by check_regression.py --frontend
+TOKENS_PER_S_FLOOR = 5.0        # CPU runner, 2-layer model: very loose
+WIRE_P95_MS_CEIL = 250.0        # pipeline+socket hop must stay light
+
+
+def _build_server():
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.core.latency import SLO
+    from repro.core.policies import Sliders
+    from repro.engine.engine import JaxExecutor
+    from repro.frontend import (AdmissionConfig, FrontendConfig,
+                                FrontendServer)
+    from repro.models import transformer as tf
+    from repro.serving import ServingLoop
+    from repro.sim.simulator import ServingConfig, build_cluster
+
+    cfg = reduced_config("smollm-135m")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    sc = ServingConfig(model="smollm-135m", tp=1, policy="taichi",
+                       sliders=Sliders(n_p=1, n_d=1, s_p=64, s_d=32),
+                       hbm_blocks=512)
+    factory = lambda: JaxExecutor(cfg, params, n_slots=8, max_seq=512)
+    cluster = build_cluster(sc, SLO(ttft=10.0, tpot=1.0),
+                            executor_factory=factory)
+    loop = ServingLoop(cluster, SLO(ttft=10.0, tpot=1.0),
+                       admission=AdmissionConfig(max_depth=128,
+                                                 max_inflight=8))
+    return FrontendServer(loop, FrontendConfig(port=0,
+                                               tok_workers=TOK_WORKERS))
+
+
+def _client(port, prompt, res, idx):
+    s = socket.create_connection(("127.0.0.1", port), timeout=300)
+    body = json.dumps({"prompt": prompt, "max_tokens": MAX_TOKENS,
+                       "stream": True}).encode()
+    t0 = time.monotonic()
+    s.sendall((f"POST /v1/completions HTTP/1.1\r\nHost: b\r\n"
+               f"Content-Length: {len(body)}\r\n"
+               "Connection: close\r\n\r\n").encode() + body)
+    ttfb = None
+    data = b""
+    while chunk := s.recv(65536):
+        if ttfb is None:
+            ttfb = time.monotonic() - t0
+        data += chunk
+    s.close()
+    # delta frames have finish_reason null; the finish chunk does not
+    res[idx] = (ttfb, data.count(b'"finish_reason":null'))
+
+
+def run():
+    srv = _build_server()
+    th = threading.Thread(target=srv.run, daemon=True)
+    th.start()
+    if not srv.started.wait(timeout=120):
+        raise RuntimeError("frontend server failed to start")
+
+    res = {}
+    clients = [threading.Thread(
+        target=_client, args=(srv.port, f"bench client {i} prompt", res, i),
+        daemon=True) for i in range(N_CLIENTS)]
+    t0 = time.monotonic()
+    for c in clients:
+        c.start()
+    for c in clients:
+        c.join(timeout=600)
+    wall = time.monotonic() - t0
+    if len(res) != N_CLIENTS:
+        raise RuntimeError(f"only {len(res)}/{N_CLIENTS} clients answered")
+
+    streamed = sum(n for _, n in res.values())
+    tok_s = streamed / wall
+    ttfbs = [t for t, _ in res.values() if t is not None]
+    wire = srv.loop.telemetry.wire_stats() or {}
+    snap = srv.loop.snapshot()
+    srv.shutdown()
+    th.join(timeout=120)
+
+    emit("frontend.streamed_tok_s", wall * 1e6 / max(streamed, 1),
+         f"{tok_s:.1f}tok/s/{N_CLIENTS}clients")
+    emit("frontend.wire_p95", wire.get("p95_ms", 0.0) * 1e3,
+         f"p50={wire.get('p50_ms', 0)}ms")
+    emit("frontend.ttfb_p95",
+         float(np.percentile(ttfbs, 95)) * 1e6 if ttfbs else 0.0,
+         f"p50={np.percentile(ttfbs, 50):.3f}s" if ttfbs else "none")
+
+    write_json("frontend_bench", {
+        "clients": N_CLIENTS,
+        "max_tokens": MAX_TOKENS,
+        "tok_workers": TOK_WORKERS,
+        "wall_s": round(wall, 3),
+        "streamed_frames": streamed,
+        "streamed_tokens_per_s": round(tok_s, 2),
+        "ttfb_p50_s": round(float(np.percentile(ttfbs, 50)), 4),
+        "ttfb_p95_s": round(float(np.percentile(ttfbs, 95)), 4),
+        "wire": wire,
+        "queue_wait": snap.get("queue_wait"),
+        "admission": snap.get("admission"),
+        "acceptance": {
+            "tokens_per_s_floor": TOKENS_PER_S_FLOOR,
+            "wire_p95_ms_ceil": WIRE_P95_MS_CEIL,
+        },
+    })
+
+
+if __name__ == "__main__":
+    run()

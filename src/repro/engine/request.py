@@ -28,6 +28,8 @@ class State(enum.Enum):
     MIGRATING = "migrating"
     FINISHED = "finished"
     REJECTED = "rejected"      # early rejection (proxy, Mooncake-style)
+    CANCELLED = "cancelled"    # shed from the admission queue or still
+                               # queued when a graceful drain began
 
 
 @dataclasses.dataclass
@@ -45,6 +47,8 @@ class Request:
     # were emitted before in the same session/system-prompt group (the
     # scheduler must never read this — it's for measuring prefix share):
     shared_prefix_len: Optional[int] = None
+    # admission-queue priority class (router-side; None = default class)
+    priority: Optional[str] = None
 
     state: State = State.QUEUED
     prefill_pos: int = 0                      # prompt tokens processed

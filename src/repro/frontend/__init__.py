@@ -1,0 +1,43 @@
+"""Network front-end: OpenAI-compatible HTTP/SSE serving on top of the
+online serving runtime.
+
+Three layers (each usable alone):
+
+* ``repro.frontend.protocol`` — wire schema: OpenAI ``/v1/completions``
+  and ``/v1/chat/completions`` request parsing, response/chunk
+  formatting, and SSE framing.  Pure functions over plain values, so
+  the detokenizer workers can format responses out-of-process.
+* ``repro.frontend.pipeline`` — the multi-process token pipeline
+  (TokenizerManager/DetokenizerManager): tokenization and incremental
+  detokenization + response formatting run in worker processes with
+  per-request affinity, so ``Instance.token_sink`` events never block
+  on host-side string work.
+* ``repro.frontend.http`` + ``repro.frontend.gateway`` — the asyncio
+  HTTP/SSE server and the bridge that runs a ``ServingLoop`` on an
+  engine thread behind it (ingress queue, admission, graceful drain,
+  ``/healthz`` + ``/metrics``).
+
+``repro.frontend.admission`` holds the router-side admission queue
+(priority/fairness classes, bounded depth) that the serving loop uses
+to absorb bursts instead of rejecting them.
+"""
+from repro.frontend.admission import (AdmissionConfig, AdmissionQueue,
+                                      PRIORITY_CLASSES)
+from repro.frontend.pipeline import TokenPipeline
+from repro.frontend.tokenizer import ByteTokenizer, IncrementalDetokenizer
+
+
+def __getattr__(name):
+    # the gateway imports repro.serving (which itself imports this
+    # package for the admission queue) — load it lazily to keep the
+    # import graph acyclic
+    if name in ("FrontendConfig", "FrontendServer"):
+        from repro.frontend import gateway
+        return getattr(gateway, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "AdmissionConfig", "AdmissionQueue", "ByteTokenizer",
+    "FrontendConfig", "FrontendServer", "IncrementalDetokenizer",
+    "PRIORITY_CLASSES", "TokenPipeline",
+]

@@ -103,6 +103,49 @@ def _live_mode(args, slo: SLO):
                      indent=2, default=str))
 
 
+def _serve_mode(args, slo: SLO):
+    """Deployable network front-end: the live JAX engine behind the
+    OpenAI-compatible HTTP/SSE server (``repro.frontend``), with the
+    multi-process tokenize/detokenize pipeline and the router-side
+    admission queue.  Blocks until SIGINT/SIGTERM, then drains."""
+    from repro.engine.engine import JaxExecutor
+    from repro.frontend import AdmissionConfig, FrontendConfig, \
+        FrontendServer
+    from repro.models import transformer as tf
+    from repro.serving import (ControllerConfig, ServingLoop,
+                               SliderController, WallClock)
+    host, _, port = args.serve.rpartition(":")
+    cfg = reduced_config(args.arch)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    sc = ServingConfig(model=args.arch, tp=1, policy=args.policy,
+                       sliders=Sliders(n_p=args.np, n_d=args.nd,
+                                       s_p=min(args.sp, 64),
+                                       s_d=min(args.sd, 32)),
+                       hbm_blocks=512)
+    factory = lambda: JaxExecutor(cfg, params, n_slots=8, max_seq=512)
+    cluster = build_cluster(sc, slo, executor_factory=factory,
+                            async_exec=not args.no_async)
+    if args.horizon > 1:
+        cluster.set_horizon(args.horizon)
+    ctl = None
+    if args.controller:
+        ctl = SliderController(ControllerConfig(
+            epoch=args.epoch, cooldown=1, sd_steps=(16, 32, 64)))
+    loop = ServingLoop(
+        cluster, slo, clock=WallClock(), pace=True, controller=ctl,
+        window=args.window,
+        admission=AdmissionConfig(max_depth=args.adm_depth,
+                                  max_inflight=args.adm_inflight))
+    srv = FrontendServer(loop, FrontendConfig(
+        host=host or "127.0.0.1", port=int(port), model=args.arch,
+        tok_workers=args.tok_workers))
+    print(f"serving {args.arch} ({args.policy}) on "
+          f"http://{host or '127.0.0.1'}:{port} — POST /v1/completions, "
+          "/v1/chat/completions; GET /healthz, /metrics", flush=True)
+    srv.run(install_signals=True)
+    print(json.dumps(loop.snapshot(), default=str))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
@@ -140,10 +183,24 @@ def main():
     ap.add_argument("--no-async", action="store_true",
                     help="live: disable the non-blocking dispatch/"
                          "commit executor pipeline")
+    # network front-end knobs
+    ap.add_argument("--serve", metavar="HOST:PORT", default=None,
+                    help="run the OpenAI-compatible HTTP/SSE server on "
+                         "the live engine (e.g. --serve 0.0.0.0:8000)")
+    ap.add_argument("--tok-workers", type=int, default=2,
+                    help="serve: tokenizer/detokenizer worker processes "
+                         "(0 = inline, single-process)")
+    ap.add_argument("--adm-depth", type=int, default=256,
+                    help="serve: admission queue depth bound")
+    ap.add_argument("--adm-inflight", type=int, default=64,
+                    help="serve: released-but-unfinished request cap")
     args = ap.parse_args()
 
     slo = SLO(ttft=args.ttft_slo, tpot=args.tpot_slo)
     sliders = Sliders(n_p=args.np, n_d=args.nd, s_p=args.sp, s_d=args.sd)
+
+    if args.serve:
+        return _serve_mode(args, slo)
 
     if args.engine == "live":
         return _live_mode(args, slo)

@@ -3,9 +3,10 @@ slider control on top of the discrete-event cluster core."""
 from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.controller import ControllerConfig, SliderController
 from repro.serving.metrics import MetricsLog, TelemetryWindow
-from repro.serving.server import RequestHandle, ServingLoop
+from repro.serving.server import RequestHandle, ServingLoop, SubmitMsg
 
 __all__ = [
     "ControllerConfig", "MetricsLog", "RequestHandle", "ServingLoop",
-    "SliderController", "TelemetryWindow", "VirtualClock", "WallClock",
+    "SliderController", "SubmitMsg", "TelemetryWindow", "VirtualClock",
+    "WallClock",
 ]

@@ -59,6 +59,16 @@ class ControllerConfig:
     # direction embargoed for this many epochs (local search with tabu —
     # prevents oscillation when neither chunk direction can win)
     tabu_epochs: int = 4
+    # ---- admission control as an actuator --------------------------
+    # when BOTH attainment signals starve, sliders cannot conjure
+    # capacity — shed from the router-side admission queue instead
+    # (lowest priority classes first; no-op when the loop runs without
+    # an admission queue).  Queue pressure also feeds the TTFT signal:
+    # a queue whose oldest entry has burned ``queue_guard`` of the TTFT
+    # SLO counts as prefill starvation even before first tokens lag.
+    shed: bool = True
+    shed_fraction: float = 0.5       # share of queued entries per shed
+    queue_guard: float = 0.5         # oldest-wait fraction of TTFT SLO
     # ---- hot-prefix replication (off by default) -------------------
     # every epoch, copy each instance's hottest matchable prefixes to
     # the instance with the fewest local hits for them — cache-aware
@@ -136,6 +146,16 @@ class SliderController:
         low = self.cfg.target - self.cfg.deadband
         ttft_bad = att_ttft is not None and att_ttft < low
         tpot_bad = att_tpot is not None and att_tpot < low
+        # the admission queue is a first-class controller signal: work
+        # aging in the router queue IS prefill starvation, visible one
+        # window earlier than the first-token stream it delays
+        adm = getattr(self.loop, "admission", None)
+        if adm is not None and len(adm) \
+                and adm.oldest_wait(now) > self.cfg.queue_guard \
+                * self.loop.slo.ttft:
+            ttft_bad = True
+            if att_ttft is None:
+                att_ttft = 0.0
         self._evaluate_last_move(now, ttft_bad, tpot_bad)
         if self.cfg.replicate:
             # orthogonal to slider motion: replication never reconfigures
@@ -147,12 +167,27 @@ class SliderController:
         if n_evidence < self.cfg.min_evidence:
             return
         if ttft_bad and tpot_bad:
-            # saturated on both axes: sliders cannot conjure capacity
+            # saturated on both axes: sliders cannot conjure capacity —
+            # admission control can: early-reject queued work from the
+            # lowest priority classes so what remains meets its SLOs
+            self._shed(now, att_ttft, att_tpot)
             return
         if ttft_bad:
             self._more_prefill(now, att_ttft)
         elif tpot_bad:
             self._more_decode(now, att_tpot)
+
+    def _shed(self, now: float, att_ttft, att_tpot):
+        if not self.cfg.shed:
+            return
+        shed_fn = getattr(self.loop, "shed_admission", None)
+        if shed_fn is None:
+            return
+        n = shed_fn(self.cfg.shed_fraction)
+        if n:
+            self._record(now, "shed", count=n,
+                         why=f"ttft_att={att_ttft:.2f} "
+                             f"tpot_att={att_tpot:.2f}")
 
     def _evaluate_last_move(self, now: float, ttft_bad: bool,
                             tpot_bad: bool):

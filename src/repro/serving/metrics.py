@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
@@ -43,12 +44,24 @@ class TelemetryWindow:
         # divide its first rates by min(window, now) — a span covering
         # time the window never observed
         self._anchor: Optional[float] = None
+        # admission-queue wait spans (release time - arrival): the
+        # router-side queue's first-class latency signal
+        self._qwait: deque = deque()     # (t, wait)
+        # wire-latency spans: wall seconds from the engine emitting a
+        # token to its SSE frame hitting the socket.  Fed from the
+        # asyncio thread (own lock; these carry wall timestamps, not
+        # window time, so they are bounded by count, not trimmed)
+        self._wire: deque = deque(maxlen=4096)   # (dt,)
+        self._wire_lock = threading.Lock()
         # lifetime counters
         self.total_first = 0
         self.total_tokens = 0
         self.total_finished = 0
         self.total_ok = 0
         self.total_rejected = 0
+        self.total_cancelled = 0
+        self.total_queue_waits = 0
+        self.total_wire_frames = 0
 
     # ------------------------------------------------------------------
     # event ingestion (wired to Instance.token_sink / Cluster callbacks)
@@ -86,9 +99,31 @@ class TelemetryWindow:
         self._rej.append((t,))
         self.total_rejected += 1
 
+    def on_cancel(self, req: Request, t: float):
+        """Graceful-drain cancellation (still queued at shutdown) —
+        counted separately from rejection: the server chose to stop,
+        the request did not fail admission."""
+        self.anchor(t)
+        self.total_cancelled += 1
+
+    def on_queue_wait(self, t: float, wait: float):
+        """Admission-queue span: seconds between a request's arrival
+        and its release into the cluster."""
+        self.anchor(t)
+        self._qwait.append((t, wait))
+        self.total_queue_waits += 1
+
+    def record_wire(self, dt: float):
+        """Wire span: engine token event -> socket write (thread-safe;
+        called from the HTTP writer)."""
+        with self._wire_lock:
+            self._wire.append(dt)
+        self.total_wire_frames += 1
+
     def _trim(self, now: float):
         cut = now - self.window
-        for dq in (self._first, self._tokens, self._fin, self._rej):
+        for dq in (self._first, self._tokens, self._fin, self._rej,
+                   self._qwait):
             while dq and dq[0][0] < cut:
                 dq.popleft()
 
@@ -152,9 +187,34 @@ class TelemetryWindow:
         xs = [tp for _, tp, _ in self._fin if tp is not None]
         return float(np.percentile(xs, 90)) if xs else None
 
+    def queue_wait_stats(self, now: float) -> Optional[dict]:
+        """Windowed admission-queue wait percentiles (None before any
+        release went through the queue)."""
+        self._trim(now)
+        xs = [w for _, w in self._qwait]
+        if not xs:
+            return None
+        return {"p50_s": round(float(np.percentile(xs, 50)), 5),
+                "p95_s": round(float(np.percentile(xs, 95)), 5),
+                "max_s": round(max(xs), 5),
+                "releases": len(xs)}
+
+    def wire_stats(self) -> Optional[dict]:
+        """Per-token wire overhead percentiles over the retained tail
+        (engine token event -> socket write, wall seconds)."""
+        with self._wire_lock:
+            xs = list(self._wire)
+        if not xs:
+            return None
+        return {"p50_ms": round(float(np.percentile(xs, 50)) * 1e3, 3),
+                "p95_ms": round(float(np.percentile(xs, 95)) * 1e3, 3),
+                "mean_ms": round(float(np.mean(xs)) * 1e3, 3),
+                "frames": self.total_wire_frames}
+
     # ------------------------------------------------------------------
     def snapshot(self, now: float,
-                 instances: Sequence = ()) -> dict:
+                 instances: Sequence = (),
+                 admission=None) -> dict:
         self._trim(now)
         span = self._span(now)
         snap = {
@@ -170,7 +230,16 @@ class TelemetryWindow:
             "finished_total": self.total_finished,
             "slo_ok_total": self.total_ok,
             "rejected_total": self.total_rejected,
+            "cancelled_total": self.total_cancelled,
         }
+        qw = self.queue_wait_stats(now)
+        if qw is not None:
+            snap["queue_wait"] = qw
+        wire = self.wire_stats()
+        if wire is not None:
+            snap["wire"] = wire
+        if admission is not None:
+            snap["admission"] = admission.gauges(now)
         if instances:
             lookups = sum(i.cache_lookups for i in instances)
             hits = sum(i.cache_hits for i in instances)

@@ -25,33 +25,48 @@ wall time by ``WallClock``.
 """
 from __future__ import annotations
 
+import dataclasses
+import queue as _queue
+import threading
 from typing import Callable, Dict, Iterable, Iterator, List, Optional
 
 from repro.core.cluster import ARRIVAL, Cluster
 from repro.core.instance import Instance
 from repro.core.latency import SLO, RunStats
 from repro.engine.request import Request, State
+from repro.frontend.admission import AdmissionConfig, AdmissionQueue
 from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.metrics import MetricsLog, TelemetryWindow
+
+_DONE_STATES = (State.FINISHED, State.REJECTED, State.CANCELLED)
 
 
 class RequestHandle:
     """Future for one submitted request: resolves when the request
-    finishes (or is rejected); streams tokens as they are emitted."""
+    finishes (or is rejected/cancelled); streams tokens as they are
+    emitted."""
 
     def __init__(self, req: Request,
                  on_token: Optional[Callable] = None):
         self.req = req
         self.tokens: List[tuple] = []        # (time, token_id | None)
         self._on_token = on_token
+        #: resolve notification (network front-end: triggers the final
+        #: response frames) — called exactly once, from the loop thread
+        self.on_done: Optional[Callable[[Request], None]] = None
+        self._resolved = False
 
     @property
     def done(self) -> bool:
-        return self.req.state in (State.FINISHED, State.REJECTED)
+        return self.req.state in _DONE_STATES
 
     @property
     def rejected(self) -> bool:
         return self.req.state == State.REJECTED
+
+    @property
+    def cancelled(self) -> bool:
+        return self.req.state == State.CANCELLED
 
     def result(self) -> Request:
         if not self.done:
@@ -65,6 +80,25 @@ class RequestHandle:
         if self._on_token is not None:
             self._on_token(self.req, t, tok)
 
+    def _resolve(self):
+        if not self._resolved:
+            self._resolved = True
+            if self.on_done is not None:
+                self.on_done(self.req)
+
+
+@dataclasses.dataclass
+class SubmitMsg:
+    """One externally-submitted request crossing the thread boundary
+    into the loop (the HTTP gateway produces these).  ``receipt`` is
+    the wall/clock time the connection actually delivered the request
+    — arrival truth for TTFT and queue-wait accounting."""
+    req: Request
+    priority: Optional[str] = None
+    receipt: Optional[float] = None
+    on_token: Optional[Callable] = None
+    reply: Optional[Callable[["RequestHandle"], None]] = None
+
 
 class ServingLoop:
     def __init__(self, cluster: Cluster, slo: SLO,
@@ -73,7 +107,8 @@ class ServingLoop:
                  controller=None, window: float = 10.0,
                  on_token: Optional[Callable] = None,
                  snapshot_every: Optional[float] = None,
-                 pace: bool = False, steal: bool = True):
+                 pace: bool = False, steal: bool = True,
+                 admission: Optional[AdmissionConfig] = None):
         self.cluster = cluster
         self.slo = slo
         self.clock = clock or VirtualClock()
@@ -94,6 +129,18 @@ class ServingLoop:
         self._next_snapshot = snapshot_every
         self._pace = pace
         self._steal = steal
+        # router-side admission queue (None = legacy immediate routing)
+        self.admission: Optional[AdmissionQueue] = (
+            AdmissionQueue(admission) if admission is not None else None)
+        self._released: set = set()     # rids admitted past the queue
+        self._inflight = 0
+        self.shed_rejections = 0
+        self.cancelled_count = 0
+        # serving-mode ingress: externally-submitted requests cross the
+        # thread boundary here (created lazily by ``serve``/``ingress``)
+        self._ingress: Optional[_queue.Queue] = None
+        self._serving = False
+        self._refusing = False       # graceful drain: cancel stragglers
         for inst in cluster.instances:
             inst.token_sink = self._token_sink
         cluster.on_finish = self._on_finish
@@ -105,18 +152,34 @@ class ServingLoop:
     # ingestion
     # ------------------------------------------------------------------
     def submit(self, req: Request,
-               on_token: Optional[Callable] = None) -> RequestHandle:
+               on_token: Optional[Callable] = None,
+               priority: Optional[str] = None,
+               receipt: Optional[float] = None) -> RequestHandle:
         """Submit one request (external callers; the arrival iterator
-        feeds through here too).  Returns its streaming future.  A
-        request whose ``arrival`` lies in the loop's past (e.g. the
-        default 0.0 on a mid-run external submission) arrives NOW —
-        events never land behind the clock, and TTFT is measured from
-        the actual submission time."""
-        req.arrival = max(req.arrival, self.cluster.now)
+        and the network ingress feed through here too).  Returns its
+        streaming future.
+
+        Arrival stamping: a ``receipt`` (actual connection-receipt
+        time, or the workload generator's intended arrival) is
+        PRESERVED as ``req.arrival`` even when the loop is running
+        behind — the heap event is clamped to now so events never land
+        behind the clock, but TTFT and queue-wait measure from when
+        the request really arrived, not from when the loop got around
+        to drawing it.  Without a receipt (bare external submission,
+        arrival defaulting to 0.0) the request arrives NOW."""
+        if receipt is not None:
+            req.arrival = receipt
+        else:
+            req.arrival = max(req.arrival, self.cluster.now)
+        if priority is not None:
+            req.priority = priority
         handle = RequestHandle(req, on_token)
         self._handles[req.rid] = handle
         self.requests.append(req)
-        self.cluster.submit(req)
+        if self.admission is not None:
+            self._enqueue_admission(req, priority)
+        else:
+            self.cluster.submit(req, t=max(req.arrival, self.cluster.now))
         return handle
 
     def _pump_arrival(self) -> bool:
@@ -129,8 +192,133 @@ class ServingLoop:
         if req is None:
             self._arrivals = None
             return False
-        self.submit(req)
+        # the generator's timestamp is the arrival truth — the pump's
+        # draw time must not rewrite it (wall-clock pacing: a loop
+        # running behind draws bursts late, and clamping arrivals to
+        # the draw would silently shrink measured queue wait and TTFT)
+        self.submit(req, receipt=req.arrival)
         return True
+
+    # ------------------------------------------------------------------
+    # router-side admission queue
+    # ------------------------------------------------------------------
+    def _enqueue_admission(self, req: Request, priority: Optional[str]):
+        q = self.admission
+        ok, displaced = q.push(req, q.resolve_class(priority),
+                               max(req.arrival, self.cluster.now))
+        for entry in displaced:
+            self._finish_unserved(entry.req, State.REJECTED)
+        if not ok:
+            self._finish_unserved(req, State.REJECTED)
+        self._release_admission()
+
+    def _release_admission(self):
+        """Move queued work into the cluster while the released
+        population is under the in-flight cap — the admission queue
+        absorbs the burst, the instance queues stay near their
+        sustainable depth."""
+        q = self.admission
+        if q is None:
+            return
+        now = self.cluster.now
+        while len(q) and self._inflight < q.cfg.max_inflight:
+            entry = q.pop()
+            self._inflight += 1
+            self._released.add(entry.req.rid)
+            self.telemetry.on_queue_wait(
+                now, max(now - entry.enq_time, 0.0))
+            self.cluster.submit(entry.req,
+                                t=max(entry.req.arrival, now))
+
+    def _finish_unserved(self, req: Request, state: State):
+        """Resolve a request that will never reach the cluster
+        (displaced/shed -> REJECTED, drained at shutdown ->
+        CANCELLED)."""
+        now = self.cluster.now
+        req.state = state
+        req.finish_time = now
+        if state == State.REJECTED:
+            self.shed_rejections += 1
+            self.telemetry.on_reject(req, now)
+        else:
+            self.cancelled_count += 1
+            self.telemetry.on_cancel(req, now)
+        handle = self._handles.get(req.rid)
+        if handle is not None:
+            handle._resolve()
+
+    def shed_admission(self, fraction: Optional[float] = None) -> int:
+        """Admission control as an actuator (SliderController, both
+        dimensions starved): early-reject queued work from the lowest
+        priority classes up.  Returns how many were shed."""
+        if self.admission is None:
+            return 0
+        entries = self.admission.shed(fraction)
+        for e in entries:
+            self._finish_unserved(e.req, State.REJECTED)
+        if entries:
+            self.log.record_event(self.cluster.now, "shed", {
+                "count": len(entries),
+                "classes": sorted({e.cls for e in entries})})
+        return len(entries)
+
+    def cancel_queued(self) -> int:
+        """Graceful drain: everything still in the admission queue
+        resolves CANCELLED (in-flight work keeps running to
+        completion)."""
+        if self.admission is None:
+            return 0
+        entries = self.admission.drain()
+        for e in entries:
+            self._finish_unserved(e.req, State.CANCELLED)
+        return len(entries)
+
+    # ------------------------------------------------------------------
+    # serving-mode ingress (thread boundary to the network front-end)
+    # ------------------------------------------------------------------
+    @property
+    def ingress(self) -> _queue.Queue:
+        """Thread-safe submission queue for ``SubmitMsg`` items; the
+        loop drains it every cycle while ``serve`` runs."""
+        if self._ingress is None:
+            self._ingress = _queue.Queue()
+        return self._ingress
+
+    def receipt_now(self) -> float:
+        """Arrival stamp for an externally-received request: wall time
+        under a ``WallClock`` (the connection's actual receipt), the
+        event clock otherwise."""
+        if isinstance(self.clock, WallClock):
+            return self.clock.now
+        return self.cluster.now
+
+    def _ingress_pending(self) -> bool:
+        return self._ingress is not None and not self._ingress.empty()
+
+    def _submit_msg(self, msg: SubmitMsg):
+        if self._refusing:
+            # graceful drain already began: never start new work
+            handle = RequestHandle(msg.req, msg.on_token)
+            self._handles[msg.req.rid] = handle
+            self.requests.append(msg.req)
+            self._finish_unserved(msg.req, State.CANCELLED)
+            if msg.reply is not None:
+                msg.reply(handle)
+            return
+        handle = self.submit(msg.req, on_token=msg.on_token,
+                             priority=msg.priority, receipt=msg.receipt)
+        if msg.reply is not None:
+            msg.reply(handle)
+
+    def _drain_ingress(self):
+        if self._ingress is None:
+            return
+        while True:
+            try:
+                msg = self._ingress.get_nowait()
+            except _queue.Empty:
+                return
+            self._submit_msg(msg)
 
     # ------------------------------------------------------------------
     # event plumbing
@@ -146,9 +334,22 @@ class ServingLoop:
 
     def _on_finish(self, req: Request, t: float):
         self.telemetry.on_finish(req, t)
+        self._retire(req)
 
     def _on_reject(self, req: Request, t: float):
         self.telemetry.on_reject(req, t)
+        self._retire(req)
+
+    def _retire(self, req: Request):
+        """A released request left the system: free its admission slot
+        (pulling the next queued request in) and resolve its handle."""
+        if req.rid in self._released:
+            self._released.discard(req.rid)
+            self._inflight -= 1
+            self._release_admission()
+        handle = self._handles.get(req.rid)
+        if handle is not None:
+            handle._resolve()
 
     # ------------------------------------------------------------------
     # control surface (used by SliderController; callable directly)
@@ -232,27 +433,33 @@ class ServingLoop:
             if not p.resolved and p.ready():
                 p.prefetch()
 
-    def _pace_until(self, t: float):
+    def _pace_until(self, t: float) -> bool:
         """Sleep to the next event time WITHOUT serializing ingestion
         behind compute: instead of one dead sleep, the gap is sliced and
         each slice polls the in-flight executor steps — the moment a
         horizon's device work completes, its results are prefetched to
         the host, so the commit event at ``t`` never blocks.  The wait
-        thus ends on whichever comes first matters: the next scheduled
-        event (arrival/commit/transfer) or in-flight work becoming
-        consumable."""
+        ends on whichever comes first: the next scheduled event
+        (arrival/commit/transfer), in-flight work becoming consumable,
+        or a NEW network ingress submission (which may schedule an
+        earlier arrival than ``t`` — the caller must re-peek).  Returns
+        False when preempted by ingress, True when ``t`` was reached."""
         pending = self._pending_steps()
-        if not pending or not isinstance(self.clock, WallClock):
-            # virtual time (or nothing in flight): a plain jump — but
-            # still harvest anything that already landed
+        slice_wait = isinstance(self.clock, WallClock) \
+            and (pending or self._ingress is not None)
+        if not slice_wait:
+            # virtual time (or nothing that could preempt): plain jump —
+            # but still harvest anything that already landed
             self._prefetch_ready(pending)
             self.clock.sleep_until(t)
-            return
+            return True
         while True:
             self._prefetch_ready(pending)
+            if self._ingress_pending():
+                return False
             now = self.clock.now
             if now >= t:
-                return
+                return True
             self.clock.sleep_until(min(t, now + self.PACE_SLICE))
 
     # ------------------------------------------------------------------
@@ -268,6 +475,7 @@ class ServingLoop:
         if self._arrivals is not None and not self.requests:
             self._pump_arrival()
         while max_steps is None or steps < max_steps:
+            self._drain_ingress()
             t = self.cluster.peek_time()
             if t is None:
                 if not self._pump_arrival():
@@ -275,8 +483,8 @@ class ServingLoop:
                 continue
             if until is not None and t > until:
                 break
-            if self._pace:
-                self._pace_until(t)
+            if self._pace and not self._pace_until(t):
+                continue              # ingress preempted: re-peek
             stepped = self.cluster.step()
             if stepped is None:
                 continue
@@ -291,11 +499,48 @@ class ServingLoop:
                 self.controller.maybe_epoch(now)
             if self._snapshot_every is not None \
                     and now >= self._next_snapshot:
-                self.log.record(self.telemetry.snapshot(
-                    now, self.cluster.instances))
+                self.log.record(self.snapshot(now))
                 self._next_snapshot = (
                     now - now % self._snapshot_every + self._snapshot_every)
         return steps
+
+    def snapshot(self, now: Optional[float] = None) -> dict:
+        now = self.cluster.now if now is None else now
+        return self.telemetry.snapshot(now, self.cluster.instances,
+                                       admission=self.admission)
+
+    # ------------------------------------------------------------------
+    # serving mode: run until told to stop, blocking on ingress when
+    # idle (the network front-end drives this on a dedicated thread)
+    # ------------------------------------------------------------------
+    #: events per ``run`` slice in serving mode — small enough that a
+    #: stop request is noticed promptly even mid-burst
+    SERVE_SLICE = 256
+
+    def serve(self, stop: threading.Event, idle_poll: float = 0.02):
+        """Drive events indefinitely: drain the ingress every cycle,
+        block briefly for new submissions when no work is pending, and
+        on ``stop`` perform a graceful drain — stop ingesting (late
+        stragglers resolve CANCELLED), resolve everything still queued
+        in the admission queue as CANCELLED, and run the in-flight
+        population to completion."""
+        self._serving = True
+        ingress = self.ingress          # materialize before clients race
+        try:
+            while not stop.is_set():
+                self.run(max_steps=self.SERVE_SLICE)
+                if self.cluster.peek_time() is None \
+                        and not self._ingress_pending():
+                    try:                # idle: wait for the next client
+                        self._submit_msg(ingress.get(timeout=idle_poll))
+                    except _queue.Empty:
+                        pass
+            self._refusing = True
+            self._drain_ingress()
+            self.cancel_queued()
+            self.run()                  # in-flight work finishes, SSE
+        finally:                        # streams flush through on_token
+            self._serving = False
 
     # ------------------------------------------------------------------
     def stats(self, qps: float) -> RunStats:
@@ -303,4 +548,5 @@ class ServingLoop:
                  else 0)
         st = self.cluster.stats(self.requests, self.slo, qps)
         st.slider_moves = moves
+        st.early_rejections += self.shed_rejections
         return st
