@@ -107,6 +107,33 @@ def check_kv_pressure(path: str) -> int:
     return 0
 
 
+def check_chaos(path: str) -> int:
+    """Gate over benchmarks/out/chaos_bench.json: under the fixed fault
+    schedule, recovery-on must strictly beat fail-stop goodput, and the
+    schedule must actually have bitten (fail-stop failed requests) —
+    otherwise the bench is measuring nothing."""
+    with open(path) as f:
+        res = json.load(f)
+    s = res["summary"]
+    failures = []
+    gain = s["recovery_goodput_gain"]
+    status = "ok" if gain > 1.0 else "REGRESSION"
+    print(f"{'recovery_goodput_gain':>26}: {gain:.3f} (floor 1.0) {status}")
+    if gain <= 1.0:
+        failures.append(f"recovery_goodput_gain {gain:.3f} <= 1.0")
+    n_failed = s["failstop_failed"]
+    status = "ok" if n_failed > 0 else "REGRESSION"
+    print(f"{'failstop_failed':>26}: {n_failed} (floor 1) {status}")
+    if n_failed <= 0:
+        failures.append("the fault schedule never failed a fail-stop "
+                        "request — the bench lost its signal")
+    if failures:
+        print("\nFAIL:\n  " + "\n  ".join(failures))
+        return 1
+    print("\nOK: chaos recovery floors hold")
+    return 0
+
+
 def check_frontend(path: str) -> int:
     """Gate over benchmarks/out/frontend_bench.json: the socket-level
     smoke run must clear its recorded streamed-rate floor and keep the
@@ -163,9 +190,14 @@ def main():
         help="also gate the HTTP/SSE front-end smoke bench JSON")
     ap.add_argument("--frontend-only", action="store_true",
                     help="gate only the front-end smoke JSON")
+    ap.add_argument("--chaos", nargs="?", const=os.path.join(
+        HERE, "out", "chaos_bench.json"),
+        help="also gate the fault-injection chaos bench JSON")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="gate only the chaos bench JSON")
     args = ap.parse_args()
     rc = 0
-    if not (args.kv_only or args.frontend_only):
+    if not (args.kv_only or args.frontend_only or args.chaos_only):
         rc |= check(args.fresh, args.baseline, args.tol)
     if args.kv or args.kv_only:
         rc |= check_kv_pressure(args.kv or os.path.join(
@@ -173,6 +205,9 @@ def main():
     if args.frontend or args.frontend_only:
         rc |= check_frontend(args.frontend or os.path.join(
             HERE, "out", "frontend_bench.json"))
+    if args.chaos or args.chaos_only:
+        rc |= check_chaos(args.chaos or os.path.join(
+            HERE, "out", "chaos_bench.json"))
     sys.exit(rc)
 
 

@@ -22,6 +22,7 @@ MODULES = [
     "prefix_cache_bench",    # shared-prefix KV cache vs. no-cache baseline
     "controller_bench",      # online slider controller vs. static/offline
     "kv_pressure_bench",     # multi-tier KV under a constrained pool
+    "chaos_bench",           # goodput under injected faults vs fail-stop
     "frontend_bench",        # HTTP/SSE front-end socket-level smoke
     "kernel_bench",          # kernels microbench
     "roofline_report",       # dry-run roofline table

@@ -131,6 +131,23 @@ class PrefixCache:
     def spilled_blocks(self) -> int:
         return 0 if self.spill is None else len(self.spill)
 
+    def clear(self) -> int:
+        """Total cache loss (instance crash): evict every cached
+        refcount-0 block and drop the host spill tier with it — nothing
+        survives the node.  Blocks still held by requests are untouched;
+        evacuate those requests first.  Returns HBM blocks dropped."""
+        spill, self.spill = self.spill, None   # no re-spilling mid-wipe
+        dropped = 0
+        try:
+            for bid in list(self.allocator._cached):
+                self.allocator.evict(bid)
+                dropped += 1
+        finally:
+            self.spill = spill
+        if self.spill is not None:
+            self.spill.clear()
+        return dropped
+
     # ------------------------------------------------------------------
     # cross-instance replication
     # ------------------------------------------------------------------

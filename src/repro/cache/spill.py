@@ -46,6 +46,13 @@ class HostSpillPool:
     def __contains__(self, chain: int) -> bool:
         return chain in self._entries
 
+    def clear(self) -> int:
+        """Drop every spilled block (host memory of a crashed node is as
+        gone as its HBM).  Returns entries dropped."""
+        n = len(self._entries)
+        self._entries.clear()
+        return n
+
     # ------------------------------------------------------------------
     def put(self, chain: int, blk_tokens: Sequence[int],
             payload) -> bool:

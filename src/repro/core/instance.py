@@ -21,6 +21,13 @@ from repro.engine.request import Request, State
 P_HEAVY = "P"
 D_HEAVY = "D"
 
+# instance health (fault tolerance): OK serves; QUARANTINED is excluded
+# from placement but keeps its KV (watchdog probation re-admits); DEAD
+# lost its HBM entirely and needs an explicit recover
+HEALTH_OK = "ok"
+HEALTH_QUARANTINED = "quarantined"
+HEALTH_DEAD = "dead"
+
 
 @dataclasses.dataclass
 class IterationPlan:
@@ -156,6 +163,16 @@ class Instance:
         self.draining: bool = False
         self.pending_flip: Optional[Tuple[str, int]] = None
         self.role_flips: int = 0
+        # fault tolerance: health gates placement exactly like draining;
+        # stall_until models a transient slowdown (dispatch durations run
+        # behind the cost model until then); last_progress/step_deadline
+        # feed the serving loop's watchdog
+        self.health: str = HEALTH_OK
+        self.stall_until: float = 0.0
+        self.last_progress: float = 0.0
+        self.step_deadline: float = float("inf")
+        self.fail_count: int = 0
+        self.quarantine_count: int = 0
         # accounting
         self.busy_until: float = 0.0
         self.iterations: int = 0
@@ -220,6 +237,12 @@ class Instance:
     def decode_load(self) -> int:
         """HBM usage proxy for proxy-side load balancing (paper §3.3 ①)."""
         return self.allocator.used_blocks
+
+    @property
+    def schedulable(self) -> bool:
+        """Health gate for every placement/migration-destination choice
+        (draining is a separate, role-flip-scoped gate)."""
+        return self.health == HEALTH_OK
 
     # ------------------------------------------------------------------
     # role reconfiguration (drain-and-flip)
@@ -457,7 +480,18 @@ class Instance:
         if plan.empty():
             return None
         dur = self.iteration_duration(plan)
+        # the watchdog's step deadline is the COST MODEL's expectation —
+        # an injected/real stall extends the actual duration past it
+        self.last_progress = now
+        self.step_deadline = now + dur
+        if now < self.stall_until:
+            dur += self.stall_until - now
         step_fn = getattr(self.executor, "step_async", None)
+        # stage the plan BEFORE the executor call: if the step raises
+        # (device fault), the fault handler's evacuation can still find
+        # every request riding the plan (a fully-taken prefill is
+        # already popped off the queue by build_plan)
+        self._inflight = (plan, None, now, dur)
         pending = step_fn(plan) if step_fn is not None else None
         self._inflight = (plan, pending, now, dur)
         self.busy_until = now + dur
@@ -484,13 +518,16 @@ class Instance:
         caller can dispatch the next horizon first and stream these
         while the device computes (one-horizon-lagged consumption)."""
         plan, pending, t0, dur = self._inflight
-        self._inflight = None
+        # resolve BEFORE discarding the in-flight record: if the
+        # readback raises (device fault), the fault handler's
+        # evacuation still sees the plan's requests
         if pending is not None:
             eos = pending.resolve()
             emitted = pending.emitted
         else:
             eos = self.executor.execute(plan)
             emitted = {}
+        self._inflight = None
         end = t0 + dur
         events: List[Tuple[Request, float]] = []
 
@@ -521,6 +558,7 @@ class Instance:
                 emit(req, end)
                 if eos.get(req.rid, False) or req.done():
                     req.state = State.FINISHED
+                    req.finish_reason = self._finish_reason(req)
                     req.finish_time = end
                     self.remove_request(req)
                     finished.append(req)
@@ -550,6 +588,7 @@ class Instance:
         for i, req in enumerate(plan.decode_reqs):
             if eos.get(req.rid, False) or req.done():
                 req.state = State.FINISHED
+                req.finish_reason = self._finish_reason(req)
                 req.finish_time = last_t[i]
                 self.remove_request(req)
                 finished.append(req)
@@ -557,7 +596,16 @@ class Instance:
             (plan.prefill_tokens, len(plan.decode_reqs)))
         self.iterations += 1
         self.busy_until = end
+        self.last_progress = end
+        self.step_deadline = float("inf")
         return CommitResult(dur, prefill_done, finished, events)
+
+    @staticmethod
+    def _finish_reason(req: Request) -> str:
+        """OpenAI semantics: "length" when generation hit the token cap,
+        "stop" when the model stopped itself (EOS / hidden output
+        length) before the cap."""
+        return "length" if req.output_len >= req.max_new_tokens else "stop"
 
     def run_iteration(self, now: float) -> Tuple[float, List[Request], List[Request]]:
         """Execute one iteration starting at ``now`` (synchronous:
@@ -599,6 +647,94 @@ class Instance:
     def has_work(self) -> bool:
         return bool(self.prefill_queue or self.decoding or
                     self.pending_decode)
+
+    # ------------------------------------------------------------------
+    # fault tolerance: abort / evacuation / crash wipe
+    # ------------------------------------------------------------------
+    def abort_request(self, req: Request) -> bool:
+        """Remove ``req`` from this instance and free everything it
+        holds (client abort).  The caller guarantees the request is not
+        inside an in-flight iteration — those are collected at commit.
+        Returns True when the request was resident here."""
+        found = False
+        if req in self.prefill_queue:
+            self.prefill_queue.remove(req)
+            found = True
+        if req in self.pending_decode:
+            self.pending_decode.remove(req)
+            found = True
+        if self.decoding.pop(req.rid, None) is not None:
+            found = True
+        if found:
+            if self.allocator.holds(req.rid):
+                self.allocator.free(req.rid)
+            self.executor.release(req)
+        return found
+
+    def _abort_inflight(self) -> Optional[IterationPlan]:
+        """Discard the in-flight iteration (the instance is being failed
+        or quarantined): the device result is abandoned, no tokens are
+        applied.  Returns the abandoned plan so the caller can evacuate
+        requests that live only in it (a fully-taken prefill is popped
+        off the queue at dispatch)."""
+        if self._inflight is None:
+            return None
+        plan, pending, _, _ = self._inflight
+        self._inflight = None
+        if pending is not None and not pending.resolved:
+            abort = getattr(self.executor, "abort_step", None)
+            if abort is not None:
+                abort(pending)
+            else:
+                pending.resolved = True
+        self.step_deadline = float("inf")
+        return plan
+
+    def evacuate(self) -> List[Request]:
+        """Pull every resident request off this instance — queued
+        prefills, pending and active decodes, and anything riding the
+        abandoned in-flight plan — freeing their blocks and executor
+        rows.  Returns the victims for the cluster to re-route through
+        preemption-by-recompute (or fail, under fail-stop)."""
+        plan = self._abort_inflight()
+        victims: List[Request] = []
+        seen = set()
+
+        def take(r: Request):
+            if r.rid not in seen:
+                seen.add(r.rid)
+                victims.append(r)
+
+        for r in self.prefill_queue:
+            take(r)
+        for r in self.pending_decode:
+            take(r)
+        for r in list(self.decoding.values()):
+            take(r)
+        if plan is not None:
+            for r, _ in plan.prefill_items:
+                take(r)
+            for r in plan.decode_reqs:
+                take(r)
+        self.prefill_queue.clear()
+        self.pending_decode.clear()
+        self.decoding.clear()
+        for r in victims:
+            if self.allocator.holds(r.rid):
+                self.allocator.free(r.rid)
+            self.executor.release(r)
+        return victims
+
+    def wipe_cache(self):
+        """Total HBM/KV loss (crash): drop the prefix cache — host spill
+        tier included, the whole node is gone — and let the executor
+        forget device-side residue that outlives requests (donor rows,
+        deferred migration payloads)."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()
+        hook = getattr(self.executor, "on_crash", None)
+        if hook is not None:
+            hook()
 
     # ------------------------------------------------------------------
     # hot-prefix replication (cross-instance, block-granular)

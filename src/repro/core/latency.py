@@ -27,11 +27,14 @@ class SLO:
 def attainment(reqs: Sequence[Request], slo: SLO) -> float:
     from repro.engine.request import State
     done = [r for r in reqs if r.first_token_time is not None
-            or r.state == State.REJECTED]
+            or r.state in (State.REJECTED, State.FAILED)]
     if not done:
         return 0.0
-    # early-rejected requests count as SLO violations (honest goodput)
-    return sum(slo.satisfied(r) and r.state != State.REJECTED
+    # early-rejected, fault-failed and client-aborted requests count as
+    # SLO violations even when their emitted tokens met the deadlines —
+    # work that never produced a complete answer is not goodput
+    bad = (State.REJECTED, State.FAILED, State.CANCELLED)
+    return sum(slo.satisfied(r) and r.state not in bad
                for r in done) / len(done)
 
 

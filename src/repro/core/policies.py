@@ -84,7 +84,10 @@ class PDAggregationPolicy(BasePolicy):
     name = "pd_aggregation"
 
     def on_arrival(self, req: Request, now: float) -> Instance:
-        inst = min(self.instances, key=lambda i: i.queued_prefill_tokens())
+        cands = [i for i in self.instances if i.schedulable]
+        if not cands:
+            return None
+        inst = min(cands, key=lambda i: i.queued_prefill_tokens())
         inst.enqueue_prefill(req)
         return inst
 
@@ -99,14 +102,18 @@ class PDDisaggregationPolicy(BasePolicy):
     name = "pd_disaggregation"
 
     def on_arrival(self, req: Request, now: float) -> Instance:
-        cands = self.p_instances
+        cands = [i for i in self.p_instances if i.schedulable]
+        if not cands:
+            return None
         inst = min(cands, key=lambda i: i.queued_prefill_tokens())
         inst.enqueue_prefill(req)
         return inst
 
     def on_prefill_done(self, req, inst, now):
-        cands = [i for i in self.d_instances if not i.draining] \
-            or self.d_instances
+        live = [i for i in self.d_instances if i.schedulable]
+        cands = [i for i in live if not i.draining] or live
+        if not cands:
+            return inst, False             # every D peer down: decode here
         target = min(cands, key=lambda i: i.decode_load())
         return target, True
 
@@ -140,7 +147,10 @@ class TaiChiPolicy(BasePolicy):
     def on_arrival(self, req: Request, now: float) -> Instance:
         if not self.length_aware:
             # naive least-queued routing (no TTFT feasibility estimate)
-            cands = [i for i in self.instances if i.chunk_size > 0]
+            cands = [i for i in self.instances
+                     if i.chunk_size > 0 and i.schedulable]
+            if not cands:
+                return None
             inst = min(cands, key=lambda i: i.queued_prefill_tokens())
             inst.enqueue_prefill(req)
             return inst
@@ -157,8 +167,10 @@ class TaiChiPolicy(BasePolicy):
             return []                      # drain machinery owns its moves
         moves = []
         s = self.sliders
-        d_avail = [i for i in self.d_instances if not i.draining]
-        p_avail = [i for i in self.p_instances if not i.draining]
+        d_avail = [i for i in self.d_instances
+                   if not i.draining and i.schedulable]
+        p_avail = [i for i in self.p_instances
+                   if not i.draining and i.schedulable]
         if inst.itype == P_HEAVY:
             for req in flowing.select_backflow(inst, self.tpot_slo,
                                                s.alpha, now):

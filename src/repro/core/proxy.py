@@ -95,7 +95,8 @@ class Proxy:
         of the prefill candidate, so ``schedule_prefill`` computes it
         once per arrival (the prefix match walks the whole prompt)."""
         dcands = [i for i in self.instances
-                  if i.itype == D_HEAVY and not i.draining]
+                  if i.itype == D_HEAVY and not i.draining
+                  and i.schedulable]
         if not dcands:
             return req.prompt_len
         dst = min(dcands, key=lambda i: i.decode_load())
@@ -109,6 +110,8 @@ class Proxy:
         for inst in self.instances:
             if inst.chunk_size <= 0:
                 continue                       # pure-decode instance
+            if not inst.schedulable:
+                continue                       # dead/quarantined
             cached = self._peek_hit(inst, req)
             Q = self._queue_time(inst)
             E = self._exec_time(inst, req, cached)
@@ -136,7 +139,10 @@ class Proxy:
             if self.early_rejection:
                 self.rejected_count += 1
                 return None
-            cands = [i for i in self.instances if i.chunk_size > 0]
+            cands = [i for i in self.instances
+                     if i.chunk_size > 0 and i.schedulable]
+            if not cands:
+                return None        # no healthy prefill capacity at all
             chosen = self._rng.choice(cands)
         chosen.enqueue_prefill(req)
         return chosen
@@ -146,7 +152,8 @@ class Proxy:
                      d_instances: Sequence[Instance]) -> Instance:
         """§3.3 step ①: in-place on D-heavy, else least-loaded D-heavy.
         Draining instances (staged role flip) accept no new decodes."""
-        cands = [i for i in d_instances if not i.draining]
+        cands = [i for i in d_instances
+                 if not i.draining and i.schedulable]
         if (prefill_inst.itype == D_HEAVY and not prefill_inst.draining) \
                 or not cands:
             return prefill_inst
@@ -154,7 +161,7 @@ class Proxy:
 
     def least_loaded(self, itype: str) -> Optional[Instance]:
         cands = [i for i in self.instances
-                 if i.itype == itype and not i.draining]
+                 if i.itype == itype and not i.draining and i.schedulable]
         if not cands:
             return None
         return min(cands, key=lambda i: i.decode_load())

@@ -724,6 +724,37 @@ class JaxExecutor:
             self._pending = step
         return step
 
+    def abort_step(self, pending=None):
+        """Fault path: abandon an in-flight dispatched step without
+        resolving it.  The device work is discarded — no tokens are
+        applied, no donor registration happens — and the single-step
+        pipeline guard is released so the instance can dispatch again
+        after recovery."""
+        step = pending if pending is not None else self._pending
+        if step is not None:
+            step.resolved = True
+        if self._pending is step:
+            self._pending = None
+
+    def on_crash(self):
+        """Total HBM loss: forget everything device-side that outlives
+        individual requests — slot rows, donor registrations, deferred
+        migration payloads.  Per-request frees happened via ``release``
+        during evacuation; this drops the residue (and any rows whose
+        requests already finished but stayed adoptable)."""
+        self.abort_step()
+        self._donors = PrefixTree(self.cache_block_size)
+        self._claimed.clear()
+        self._preadded.clear()
+        self._deferred_states.clear()
+        for rid in list(self.slots._slot_of):
+            slot = self.slots.release(rid)
+            if self.paged and slot is not None:
+                self.kv.clear_row(slot)
+            if self.paged and not self._external_bookkeeping \
+                    and self.kv.allocator.holds(rid):
+                self.kv.allocator.free(rid)
+
     # ---- paged hot path: one fused mixed-batch jit call ---------------
     def _step_paged(self, plan) -> PendingStep:
         """Dispatch a whole TaiChi iteration — every prefill chunk AND

@@ -28,8 +28,17 @@ class State(enum.Enum):
     MIGRATING = "migrating"
     FINISHED = "finished"
     REJECTED = "rejected"      # early rejection (proxy, Mooncake-style)
-    CANCELLED = "cancelled"    # shed from the admission queue or still
-                               # queued when a graceful drain began
+    CANCELLED = "cancelled"    # shed from the admission queue, aborted by
+                               # the client, or still queued when a
+                               # graceful drain began
+    FAILED = "failed"          # unrecoverable fault (instance crash under
+                               # fail-stop, transfer retries exhausted,
+                               # crash-recovery loop bound hit)
+
+
+#: states a request never leaves — every submitted request must reach one
+TERMINAL_STATES = (State.FINISHED, State.REJECTED, State.CANCELLED,
+                   State.FAILED)
 
 
 @dataclasses.dataclass
@@ -76,6 +85,13 @@ class Request:
     # prefill tokens co-batched during this request's decode iterations
     # (numerator of "interference intensity", paper §2.3.1)
     interference_tokens: int = 0
+    # terminal outcome detail: "stop" (EOS) / "length" for FINISHED,
+    # "abort" for client-cancelled, a failure reason for FAILED
+    finish_reason: Optional[str] = None
+    # fault recovery: times this request was evacuated off a failed /
+    # quarantined instance (or lost a transfer) and re-prefilled; bounded
+    # by FaultToleranceConfig.max_recoveries
+    n_recoveries: int = 0
 
     # ----------------------------------------------------------------
     @property

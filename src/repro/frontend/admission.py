@@ -162,6 +162,24 @@ class AdmissionQueue:
         self.shed_count += len(out)
         return out
 
+    def remove(self, rid: int) -> Optional[Entry]:
+        """Pull one queued entry out by request id (client abandoned it
+        before release).  Returns the entry, or None if ``rid`` is not
+        queued here (already released, or never admitted)."""
+        for d in self._q.values():
+            for e in d:
+                if e.req.rid == rid:
+                    d.remove(e)
+                    return e
+        return None
+
+    def retry_after_hint(self) -> int:
+        """Whole seconds a refused client should wait before retrying,
+        scaled by how many release cycles the current backlog represents
+        (depth / max_inflight), clamped to [1, 60]."""
+        cycles = len(self) / max(1, self.cfg.max_inflight)
+        return int(max(1, min(60, 1 + cycles)))
+
     def drain(self) -> List[Entry]:
         """Empty the queue (graceful shutdown: these resolve
         cancelled)."""

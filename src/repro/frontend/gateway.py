@@ -36,7 +36,7 @@ from typing import Optional, Set
 from repro.frontend import protocol
 from repro.frontend.http import HttpServer, Response
 from repro.frontend.pipeline import TokenPipeline
-from repro.serving.server import ServingLoop, SubmitMsg
+from repro.serving.server import AbortMsg, ServingLoop, SubmitMsg
 
 from repro.engine.request import Request, State
 
@@ -136,8 +136,16 @@ class FrontendServer:
         if method == "GET" and path == "/healthz":
             alive = (self._engine_thread is not None
                      and self._engine_thread.is_alive())
-            return Response(200 if alive else 503, body=json.dumps(
-                {"status": "ok" if alive else "engine down"}).encode())
+            insts = [{"iid": i.iid, "itype": i.itype,
+                      "health": getattr(i, "health", "ok"),
+                      "draining": i.draining}
+                     for i in self.loop.cluster.instances]
+            healthy = alive and any(i["health"] == "ok" for i in insts)
+            status = ("ok" if healthy else
+                      "engine down" if not alive else
+                      "no healthy instances")
+            return Response(200 if healthy else 503, body=json.dumps(
+                {"status": status, "instances": insts}).encode())
         if method == "GET" and path == "/metrics":
             return Response(200, body=await self._metrics())
         if path in (protocol.COMPLETIONS, protocol.CHAT_COMPLETIONS):
@@ -203,8 +211,10 @@ class FrontendServer:
 
         def on_done(r):
             if r.state == State.FINISHED:
-                self.pipeline.finish(rid, "length", len(ids),
-                                     time.monotonic())
+                # EOS before the token budget ran out reports "stop";
+                # hitting max_tokens reports "length"
+                self.pipeline.finish(rid, r.finish_reason or "length",
+                                     len(ids), time.monotonic())
             else:                     # rejected / cancelled: bypass the
                 aio.call_soon_threadsafe(     # worker, report status
                     ctx.frames.put_nowait, ("status", r.state.value))
@@ -219,7 +229,15 @@ class FrontendServer:
         if first[0] == "status":
             self._close_ctx(rid)
             status = first[1]
-            return Response(503, body=protocol.ProtocolError(
+            headers = None
+            if status == "rejected":
+                # overload refusal: tell the client when the current
+                # admission backlog should have cleared
+                q = self.loop.admission
+                headers = {"Retry-After": str(
+                    q.retry_after_hint() if q is not None else 1)}
+            return Response(503, headers=headers,
+                            body=protocol.ProtocolError(
                 503, f"request {status} by the server"
                      + (" (overloaded)" if status == "rejected" else ""),
                 err_type="server_error").body())
@@ -274,3 +292,10 @@ class FrontendServer:
     def _close_ctx(self, rid: int):
         self._ctxs.pop(rid, None)
         self.pipeline.close(rid)
+        # client gone before the request resolved (SSE disconnect, or a
+        # dropped non-streaming connection): propagate the abort so the
+        # engine stops generating into a dead socket and frees the
+        # request's KV blocks.  A no-op for normally-completed requests.
+        handle = self.loop._handles.get(rid)
+        if handle is not None and not handle.done:
+            self.loop.ingress.put(AbortMsg(rid))

@@ -32,6 +32,8 @@ class Response:
     content_type: str = "application/json"
     body: Optional[bytes] = None
     stream: Optional[AsyncIterator[bytes]] = None
+    #: extra response headers (e.g. Retry-After on overload 503s)
+    headers: Optional[Dict[str, str]] = None
     #: called when the client goes away mid-stream (cleanup hook)
     on_disconnect: Optional[Callable[[], None]] = None
 
@@ -165,8 +167,10 @@ class HttpServer:
 
     async def _respond(self, writer, resp: Response):
         body = resp.body or b""
+        extra = "".join(f"{k}: {v}\r\n"
+                        for k, v in (resp.headers or {}).items())
         writer.write(_head(resp.status, resp.content_type,
-                           length=len(body)) + body)
+                           extra=extra, length=len(body)) + body)
         await writer.drain()
 
     async def _stream(self, writer, resp: Response):

@@ -1,12 +1,33 @@
 """Online serving runtime: continuous ingestion + streaming + adaptive
-slider control on top of the discrete-event cluster core."""
-from repro.serving.clock import VirtualClock, WallClock
-from repro.serving.controller import ControllerConfig, SliderController
-from repro.serving.metrics import MetricsLog, TelemetryWindow
-from repro.serving.server import RequestHandle, ServingLoop, SubmitMsg
+slider control on top of the discrete-event cluster core.
 
-__all__ = [
-    "ControllerConfig", "MetricsLog", "RequestHandle", "ServingLoop",
-    "SliderController", "SubmitMsg", "TelemetryWindow", "VirtualClock",
-    "WallClock",
-]
+Re-exports resolve lazily (PEP 562): the cluster core imports
+``repro.serving.faults`` at module load, and an eager ``server`` import
+here would close the cycle back onto the half-initialized cluster.
+"""
+_EXPORTS = {
+    "VirtualClock": "repro.serving.clock",
+    "WallClock": "repro.serving.clock",
+    "ControllerConfig": "repro.serving.controller",
+    "SliderController": "repro.serving.controller",
+    "Fault": "repro.serving.faults",
+    "FaultInjector": "repro.serving.faults",
+    "MetricsLog": "repro.serving.metrics",
+    "TelemetryWindow": "repro.serving.metrics",
+    "AbortMsg": "repro.serving.server",
+    "RequestHandle": "repro.serving.server",
+    "ServingLoop": "repro.serving.server",
+    "SubmitMsg": "repro.serving.server",
+    "WatchdogConfig": "repro.serving.server",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

@@ -106,7 +106,7 @@ class SliderController:
     # ------------------------------------------------------------------
     def _instances(self, itype: str) -> List:
         return [i for i in self.loop.cluster.instances
-                if i.itype == itype and not i.draining]
+                if i.itype == itype and not i.draining and i.schedulable]
 
     def _flip_in_progress(self) -> bool:
         return any(i.pending_flip is not None
@@ -223,7 +223,8 @@ class SliderController:
         cfg = self.cfg
         cluster = self.loop.cluster
         insts = [i for i in cluster.instances
-                 if i.prefix_cache is not None and not i.draining]
+                 if i.prefix_cache is not None and not i.draining
+                 and i.schedulable]
         if len(insts) < 2:
             return
         for src in insts:

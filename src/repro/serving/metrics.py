@@ -62,6 +62,14 @@ class TelemetryWindow:
         self.total_cancelled = 0
         self.total_queue_waits = 0
         self.total_wire_frames = 0
+        # fault-tolerance outcomes: aborts (client hung up), failures
+        # (unrecoverable fault), and finishes that survived >=1
+        # crash/quarantine recovery (the "recovered goodput" the chaos
+        # bench credits to the recovery path)
+        self.total_aborted = 0
+        self.total_failed = 0
+        self.total_recovered = 0
+        self.total_recovered_ok = 0
 
     # ------------------------------------------------------------------
     # event ingestion (wired to Instance.token_sink / Cluster callbacks)
@@ -93,6 +101,9 @@ class TelemetryWindow:
         self._fin.append((t, req.tpot(), ok))
         self.total_finished += 1
         self.total_ok += int(ok)
+        if getattr(req, "n_recoveries", 0) > 0:
+            self.total_recovered += 1
+            self.total_recovered_ok += int(ok)
 
     def on_reject(self, req: Request, t: float):
         self.anchor(t)
@@ -105,6 +116,19 @@ class TelemetryWindow:
         the request did not fail admission."""
         self.anchor(t)
         self.total_cancelled += 1
+
+    def on_abort(self, req: Request, t: float):
+        """Client-initiated abort (disconnect propagation): the request
+        left the system by the client's choice — neither a finish nor a
+        rejection."""
+        self.anchor(t)
+        self.total_aborted += 1
+
+    def on_failed(self, req: Request, t: float):
+        """Unrecoverable fault outcome (fail-stop crash loss, transfer
+        retries exhausted, recovery loop bound)."""
+        self.anchor(t)
+        self.total_failed += 1
 
     def on_queue_wait(self, t: float, wait: float):
         """Admission-queue span: seconds between a request's arrival
@@ -232,6 +256,15 @@ class TelemetryWindow:
             "rejected_total": self.total_rejected,
             "cancelled_total": self.total_cancelled,
         }
+        # fault-outcome keys appear only once something fired: a
+        # faults-off run snapshots identically to pre-fault builds
+        if self.total_aborted:
+            snap["aborted_total"] = self.total_aborted
+        if self.total_failed:
+            snap["failed_total"] = self.total_failed
+        if self.total_recovered:
+            snap["recovered_total"] = self.total_recovered
+            snap["recovered_slo_ok_total"] = self.total_recovered_ok
         qw = self.queue_wait_stats(now)
         if qw is not None:
             snap["queue_wait"] = qw
@@ -277,6 +310,9 @@ class TelemetryWindow:
             # prefill capacity
             "interference": (float(np.mean(mixed)) if mixed else 0.0),
         }
+        health = getattr(inst, "health", "ok")
+        if health != "ok":             # healthy runs snapshot unchanged
+            gauges["health"] = health
         pc = getattr(inst, "prefix_cache", None)
         if pc is not None and getattr(pc, "spill", None) is not None:
             gauges["spilled_blocks"] = len(pc.spill)

@@ -30,15 +30,37 @@ import queue as _queue
 import threading
 from typing import Callable, Dict, Iterable, Iterator, List, Optional
 
-from repro.core.cluster import ARRIVAL, Cluster
-from repro.core.instance import Instance
+from repro.core.cluster import ARRIVAL, COMMIT, Cluster
+from repro.core.instance import (HEALTH_OK, HEALTH_QUARANTINED, Instance)
 from repro.core.latency import SLO, RunStats
 from repro.engine.request import Request, State
 from repro.frontend.admission import AdmissionConfig, AdmissionQueue
 from repro.serving.clock import VirtualClock, WallClock
+from repro.serving.faults import FaultInjector
 from repro.serving.metrics import MetricsLog, TelemetryWindow
 
-_DONE_STATES = (State.FINISHED, State.REJECTED, State.CANCELLED)
+_DONE_STATES = (State.FINISHED, State.REJECTED, State.CANCELLED,
+                State.FAILED)
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    """Stall/heartbeat detection and probation-based re-admission.
+
+    ``heartbeat_timeout`` is EVENT time: an instance whose dispatched
+    step runs this far past its cost-model deadline (``step_deadline``)
+    is quarantined — injected stalls and real slowdowns both trip it.
+    ``stall_timeout`` is WALL time (live executors only): a COMMIT whose
+    ``PendingStep`` still isn't ready this long past the modeled end
+    quarantines the instance instead of blocking the loop on
+    ``resolve()``.  Quarantined instances re-admit after ``probation``
+    seconds, doubling per repeat offense up to ``max_probation``."""
+    heartbeat_timeout: float = 2.0
+    stall_timeout: float = 2.0
+    probation: float = 5.0
+    probation_backoff: float = 2.0
+    max_probation: float = 60.0
+    check_every: float = 0.25
 
 
 class RequestHandle:
@@ -67,6 +89,10 @@ class RequestHandle:
     @property
     def cancelled(self) -> bool:
         return self.req.state == State.CANCELLED
+
+    @property
+    def failed(self) -> bool:
+        return self.req.state == State.FAILED
 
     def result(self) -> Request:
         if not self.done:
@@ -100,6 +126,15 @@ class SubmitMsg:
     reply: Optional[Callable[["RequestHandle"], None]] = None
 
 
+@dataclasses.dataclass
+class AbortMsg:
+    """Client-disconnect propagation: the gateway enqueues one of these
+    when an SSE connection drops; the loop aborts the request in the
+    engine and frees its blocks.  A no-op if the request already
+    resolved (normal completion also closes the connection)."""
+    rid: int
+
+
 class ServingLoop:
     def __init__(self, cluster: Cluster, slo: SLO,
                  arrivals: Optional[Iterable[Request]] = None,
@@ -108,7 +143,9 @@ class ServingLoop:
                  on_token: Optional[Callable] = None,
                  snapshot_every: Optional[float] = None,
                  pace: bool = False, steal: bool = True,
-                 admission: Optional[AdmissionConfig] = None):
+                 admission: Optional[AdmissionConfig] = None,
+                 watchdog: Optional[WatchdogConfig] = None,
+                 faults: Optional[FaultInjector] = None):
         self.cluster = cluster
         self.slo = slo
         self.clock = clock or VirtualClock()
@@ -141,10 +178,22 @@ class ServingLoop:
         self._ingress: Optional[_queue.Queue] = None
         self._serving = False
         self._refusing = False       # graceful drain: cancel stragglers
+        # fault tolerance: watchdog (stall/heartbeat detection +
+        # probation re-admission) and optional fault injection
+        self.watchdog = watchdog
+        self._next_watchdog = 0.0
+        self._probation_until: Dict[int, float] = {}
+        self._strikes: Dict[int, int] = {}
+        self.aborted_count = 0
+        self.failed_count = 0
         for inst in cluster.instances:
             inst.token_sink = self._token_sink
         cluster.on_finish = self._on_finish
         cluster.on_reject = self._on_reject
+        cluster.on_failed = self._on_failed
+        cluster.on_abort = self._on_abort
+        if faults is not None:
+            cluster.attach_faults(faults)
         if controller is not None:
             controller.bind(self)
 
@@ -310,6 +359,12 @@ class ServingLoop:
         if msg.reply is not None:
             msg.reply(handle)
 
+    def _ingress_msg(self, msg):
+        if isinstance(msg, AbortMsg):
+            self.abort(msg.rid)
+        else:
+            self._submit_msg(msg)
+
     def _drain_ingress(self):
         if self._ingress is None:
             return
@@ -318,7 +373,7 @@ class ServingLoop:
                 msg = self._ingress.get_nowait()
             except _queue.Empty:
                 return
-            self._submit_msg(msg)
+            self._ingress_msg(msg)
 
     # ------------------------------------------------------------------
     # event plumbing
@@ -339,6 +394,44 @@ class ServingLoop:
     def _on_reject(self, req: Request, t: float):
         self.telemetry.on_reject(req, t)
         self._retire(req)
+
+    def _on_failed(self, req: Request, t: float):
+        self.telemetry.on_failed(req, t)
+        self.failed_count += 1
+        self._retire(req)
+
+    def _on_abort(self, req: Request, t: float):
+        self.telemetry.on_abort(req, t)
+        self.aborted_count += 1
+        self._retire(req)
+
+    # ------------------------------------------------------------------
+    # client-initiated abort (disconnect propagation)
+    # ------------------------------------------------------------------
+    def abort(self, rid: int) -> bool:
+        """Abort one submitted request: pulled straight out of the
+        admission queue if unreleased, otherwise handed to the cluster's
+        safe-boundary abort machinery (it frees KV blocks the moment the
+        request is not mid-flight).  Idempotent; True once the request
+        is terminally resolved or the abort is staged."""
+        handle = self._handles.get(rid)
+        if handle is None:
+            return False
+        req = handle.req
+        if req.state in _DONE_STATES:
+            return True
+        if self.admission is not None and rid not in self._released:
+            entry = self.admission.remove(rid)
+            if entry is not None:
+                now = self.cluster.now
+                req.state = State.CANCELLED
+                req.finish_reason = "abort"
+                req.finish_time = now
+                self.aborted_count += 1
+                self.telemetry.on_abort(req, now)
+                handle._resolve()
+                return True
+        return self.cluster.abort_request(req)
 
     def _retire(self, req: Request):
         """A released request left the system: free its admission slot
@@ -387,6 +480,75 @@ class ServingLoop:
                 "itype": itype, "chunk": chunk_size, "instances": n})
         return n
 
+    # ------------------------------------------------------------------
+    # watchdog: stall/heartbeat detection + probation re-admission
+    # ------------------------------------------------------------------
+    def _start_probation(self, inst: Instance, now: float) -> float:
+        """Schedule the quarantined instance's re-admission, doubling
+        the probation per repeat offense up to the cap."""
+        wd = self.watchdog
+        strikes = self._strikes.get(inst.iid, 0)
+        self._strikes[inst.iid] = strikes + 1
+        probation = min(wd.probation * wd.probation_backoff ** strikes,
+                        wd.max_probation)
+        until = now + probation
+        self._probation_until[inst.iid] = until
+        return probation
+
+    def _quarantine(self, inst: Instance, now: float, why: str):
+        self.cluster.quarantine_instance(inst, now, reason=why)
+        probation = self._start_probation(inst, now)
+        self.log.record_event(now, "quarantine", {
+            "iid": inst.iid, "why": why,
+            "probation_s": round(probation, 3)})
+
+    def _watchdog_check(self, now: float):
+        """Periodic health sweep: quarantine instances whose dispatched
+        step ran past its cost-model deadline by ``heartbeat_timeout``
+        (missed heartbeat — stalls and slowdowns), and re-admit
+        quarantined instances whose probation has elapsed.  Instances
+        the CLUSTER quarantined on its own (executor exceptions) get a
+        probation clock here too — the watchdog owns all re-admission."""
+        wd = self.watchdog
+        if wd is None or now < self._next_watchdog:
+            return
+        self._next_watchdog = now + wd.check_every
+        for inst in self.cluster.instances:
+            if inst.health == HEALTH_OK:
+                if now > inst.step_deadline + wd.heartbeat_timeout:
+                    self._quarantine(inst, now, "heartbeat")
+            elif inst.health == HEALTH_QUARANTINED:
+                until = self._probation_until.get(inst.iid)
+                if until is None:          # cluster-initiated quarantine
+                    until = now + self._start_probation(inst, now)
+                if now >= until and self.cluster.recover_instance(inst,
+                                                                  now):
+                    self._probation_until.pop(inst.iid, None)
+                    self.log.record_event(now, "readmit",
+                                          {"iid": inst.iid})
+
+    def _stall_check(self) -> bool:
+        """Live-path stall guard: when the next event is a COMMIT whose
+        async step STILL is not device-ready ``stall_timeout`` wall
+        seconds past its modeled end, quarantine the instance instead of
+        letting ``PendingStep.resolve`` block the loop forever.  Returns
+        True when it intervened (the caller re-peeks: the COMMIT is now
+        stale and the evacuated work has been rerouted)."""
+        wd = self.watchdog
+        if wd is None or not isinstance(self.clock, WallClock):
+            return False
+        ev = self.cluster.peek_event()
+        if ev is None or ev[1] != COMMIT:
+            return False
+        inst = self.cluster._inst_by_id[ev[2]]
+        pending = inst.pending_step()
+        if pending is None or pending.ready():
+            return False
+        if self.clock.now < inst.step_deadline + wd.stall_timeout:
+            return False
+        self._quarantine(inst, self.cluster.now, "stall")
+        return True
+
     def _steal_prefill(self):
         """Online-runtime load repair: an idle prefill-capable instance
         pulls queued-but-unadmitted prefill work from the deepest peer
@@ -394,7 +556,9 @@ class ServingLoop:
         (e.g. the queue an instance accumulated before a slider move);
         stealing lets spare capacity drain the backlog instead of
         leaving it pinned to the original placement."""
-        insts = self.cluster.instances
+        insts = [i for i in self.cluster.instances if i.schedulable]
+        if len(insts) < 2:
+            return
         idle = [i for i in insts
                 if i.chunk_size > 0 and not i.prefill_queue
                 and not i.decoding and not i.pending_decode]
@@ -476,6 +640,7 @@ class ServingLoop:
             self._pump_arrival()
         while max_steps is None or steps < max_steps:
             self._drain_ingress()
+            self._watchdog_check(self.cluster.now)
             t = self.cluster.peek_time()
             if t is None:
                 if not self._pump_arrival():
@@ -485,6 +650,8 @@ class ServingLoop:
                 break
             if self._pace and not self._pace_until(t):
                 continue              # ingress preempted: re-peek
+            if self._stall_check():
+                continue              # quarantined a stalled step: re-peek
             stepped = self.cluster.step()
             if stepped is None:
                 continue
@@ -506,8 +673,14 @@ class ServingLoop:
 
     def snapshot(self, now: Optional[float] = None) -> dict:
         now = self.cluster.now if now is None else now
-        return self.telemetry.snapshot(now, self.cluster.instances,
+        snap = self.telemetry.snapshot(now, self.cluster.instances,
                                        admission=self.admission)
+        # fault section only when something actually fired — a faults-off
+        # run snapshots bit-identically to one without this layer at all
+        fc = self.cluster.fault_counters()
+        if any(fc.values()):
+            snap["faults"] = fc
+        return snap
 
     # ------------------------------------------------------------------
     # serving mode: run until told to stop, blocking on ingress when
@@ -532,7 +705,7 @@ class ServingLoop:
                 if self.cluster.peek_time() is None \
                         and not self._ingress_pending():
                     try:                # idle: wait for the next client
-                        self._submit_msg(ingress.get(timeout=idle_poll))
+                        self._ingress_msg(ingress.get(timeout=idle_poll))
                     except _queue.Empty:
                         pass
             self._refusing = True

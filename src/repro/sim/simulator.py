@@ -7,7 +7,7 @@ import dataclasses
 from typing import Callable, List, Optional, Sequence
 
 from repro.configs import get_config
-from repro.core.cluster import Cluster
+from repro.core.cluster import Cluster, FaultToleranceConfig
 from repro.core.estimator import CostModel
 from repro.core.hw import InstanceSpec
 from repro.core.latency import SLO, RunStats, max_goodput
@@ -34,7 +34,8 @@ class ServingConfig:
 def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
                   executor_factory: Optional[Callable] = None,
                   taichi_flags: Optional[dict] = None,
-                  async_exec: bool = False) -> Cluster:
+                  async_exec: bool = False,
+                  ft: Optional[FaultToleranceConfig] = None) -> Cluster:
     cfg = get_config(sc.model)
     cost = CostModel(cfg, InstanceSpec(tp=sc.tp))
     factory = executor_factory or (lambda: SimExecutor())
@@ -64,7 +65,7 @@ def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
                               sliders=s, seed=seed, **(taichi_flags or {}))
     else:
         raise ValueError(sc.policy)
-    return Cluster(policy, cost, async_exec=async_exec)
+    return Cluster(policy, cost, async_exec=async_exec, ft=ft)
 
 
 def run_sim(sc: ServingConfig, slo: SLO, workload: WorkloadSpec,

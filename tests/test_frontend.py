@@ -8,18 +8,22 @@ cluster."""
 import json
 import os
 import socket
+import struct
 import threading
 import time
 
 import pytest
 
+from repro.core.instance import HEALTH_DEAD
 from repro.core.latency import SLO
+from repro.engine.engine import SimExecutor
 from repro.core.policies import Sliders
 from repro.engine.request import Request, State
 from repro.frontend import (AdmissionConfig, AdmissionQueue, ByteTokenizer,
                             FrontendConfig, FrontendServer,
                             IncrementalDetokenizer, TokenPipeline, protocol)
-from repro.serving import ControllerConfig, ServingLoop, SliderController
+from repro.serving import (ControllerConfig, ServingLoop, SliderController,
+                           WallClock)
 from repro.sim.simulator import ServingConfig, build_cluster
 
 BAL = SLO(ttft=1.5, tpot=0.030)
@@ -27,9 +31,9 @@ LOOSE = SLO(ttft=10.0, tpot=1.0)
 
 
 def _mk_loop(slo=BAL, admission=None, sliders=Sliders(1, 1, 512, 256),
-             blocks=4096, **kw):
+             blocks=4096, executor_factory=None, **kw):
     sc = ServingConfig(sliders=sliders, hbm_blocks=blocks)
-    cluster = build_cluster(sc, slo)
+    cluster = build_cluster(sc, slo, executor_factory=executor_factory)
     return ServingLoop(cluster, slo, admission=admission, **kw)
 
 
@@ -533,6 +537,126 @@ def test_http_priority_header_lands_in_admission(server):
     assert status == 200
     reqs = [r for r in server.loop.requests if r.priority is not None]
     assert any(r.priority == "interactive" for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# request-lifecycle hardening: finish reasons, overload headers,
+# per-instance health, disconnect propagation
+# ---------------------------------------------------------------------------
+
+def test_protocol_renders_both_finish_reasons():
+    for reason in ("stop", "length"):
+        fin = protocol.stream_chunk("completion", "cmpl-1", "m", 1, "",
+                                    reason)
+        obj = json.loads(fin[len(b"data: "):])
+        assert obj["choices"][0]["finish_reason"] == reason
+        body = protocol.final_response("completion", "cmpl-1", "m", 1,
+                                       "txt", reason, 3, 4)
+        assert json.loads(body)["choices"][0]["finish_reason"] == reason
+
+
+def test_eos_before_cap_finishes_stop_at_cap_finishes_length():
+    loop = _mk_loop(slo=LOOSE)
+    eos = Request(prompt_len=64, max_new_tokens=32, hidden_output_len=8)
+    cap = Request(prompt_len=64, max_new_tokens=8, hidden_output_len=100)
+    loop.submit(eos)
+    loop.submit(cap)
+    loop.run()
+    assert eos.state == State.FINISHED and cap.state == State.FINISHED
+    assert (eos.finish_reason, eos.output_len) == ("stop", 8)
+    assert (cap.finish_reason, cap.output_len) == ("length", 8)
+
+
+def test_http_reject_carries_retry_after():
+    # a zero-depth queue refuses every arrival: the client must get a
+    # 503 with a Retry-After hint, not a bare error
+    loop = _mk_loop(slo=LOOSE, admission=AdmissionConfig(
+        max_depth=0, max_inflight=0))
+    srv = FrontendServer(loop, FrontendConfig(port=0, tok_workers=0))
+    th = threading.Thread(target=srv.run, daemon=True)
+    th.start()
+    assert srv.started.wait(timeout=15)
+    try:
+        status, head, payload = _http(
+            srv.port, "POST", "/v1/completions",
+            json.dumps({"prompt": "nope", "max_tokens": 2}).encode())
+        assert status == 503
+        assert b"Retry-After:" in head
+        assert b"overloaded" in payload
+    finally:
+        srv.shutdown()
+        th.join(timeout=15)
+
+
+def test_http_healthz_reports_per_instance_health(server):
+    status, _, payload = _http(server.port, "GET", "/healthz")
+    obj = json.loads(payload)
+    assert status == 200 and obj["status"] == "ok"
+    insts = obj["instances"]
+    assert insts and all(i["health"] == "ok" for i in insts)
+    assert {"iid", "itype", "health", "draining"} <= set(insts[0])
+    # every instance down: healthz flips to 503 and names the cause
+    for inst in server.loop.cluster.instances:
+        inst.health = HEALTH_DEAD
+    status, _, payload = _http(server.port, "GET", "/healthz")
+    obj = json.loads(payload)
+    assert status == 503 and obj["status"] == "no healthy instances"
+    assert all(i["health"] == "dead" for i in obj["instances"])
+
+
+class _TokenEchoExecutor(SimExecutor):
+    """Sim oracle that also emits one byte token per decode step, so the
+    SSE path streams real mid-generation frames (the live-engine shape)
+    without any accelerator work."""
+
+    def step_async(self, plan):
+        for req in plan.decode_reqs:
+            req.output_tokens.append(65)      # "A"
+        return super().step_async(plan)
+
+
+def test_sse_disconnect_aborts_engine_request():
+    # paced wall-clock loop: 512 tokens take seconds of real time, so
+    # the client can vanish mid-stream and the engine must notice, stop
+    # generating into the dead socket, and free the KV blocks
+    loop = _mk_loop(slo=LOOSE, clock=WallClock(), pace=True,
+                    executor_factory=_TokenEchoExecutor,
+                    admission=AdmissionConfig(max_depth=16, max_inflight=4))
+    srv = FrontendServer(loop, FrontendConfig(port=0, tok_workers=0))
+    th = threading.Thread(target=srv.run, daemon=True)
+    th.start()
+    assert srv.started.wait(timeout=15)
+    try:
+        body = json.dumps({"prompt": "never read", "max_tokens": 512,
+                           "stream": True}).encode()
+        s = socket.create_connection(("127.0.0.1", srv.port), timeout=20)
+        s.sendall((f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                   f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        assert s.recv(1)                  # stream is live
+        # RST on close so the server's next frame write fails at once
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                     struct.pack("ii", 1, 0))
+        s.close()
+        deadline = time.monotonic() + 20
+        aborted = None
+        while aborted is None and time.monotonic() < deadline:
+            aborted = next((r for r in loop.requests
+                            if r.state == State.CANCELLED), None)
+            time.sleep(0.05)
+        assert aborted is not None, "disconnect never propagated"
+        assert aborted.finish_reason == "abort"
+        assert aborted.output_len < 512   # generation stopped early
+        deadline = time.monotonic() + 10
+        while (any(i.allocator.holds(aborted.rid)
+                   for i in loop.cluster.instances)
+               and time.monotonic() < deadline):
+            time.sleep(0.05)
+        for inst in loop.cluster.instances:
+            assert not inst.allocator.holds(aborted.rid), "KV leaked"
+        assert loop.aborted_count >= 1
+    finally:
+        srv.shutdown()
+        th.join(timeout=15)
 
 
 def test_graceful_shutdown_cancels_queued():

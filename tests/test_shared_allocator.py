@@ -53,6 +53,28 @@ def run_ops(ops, num_blocks, block_size):
         elif op == "register":
             if rid in shadow and shadow[rid]:
                 a.register(shadow[rid][tokens % len(shadow[rid])])
+        elif op == "evacuate":
+            # instance quarantine: a subset of residents is pulled off
+            # and re-routed elsewhere — their blocks must all come back
+            victims = sorted(shadow)[::2]
+            for v in victims:
+                held = shadow.pop(v)
+                assert a.free(v) == len(held)
+        elif op == "crash":
+            # total instance loss: every resident freed, then the whole
+            # cached tier wiped (prefix cache gone with the HBM)
+            for v in list(shadow):
+                a.free(v)
+            shadow.clear()
+            for bid in list(a._cached):
+                a.evict(bid)
+            assert a.used_blocks == 0 and a.cached_blocks == 0
+        elif op == "retry":
+            # transfer-retry landing: the same rid re-allocates after a
+            # recompute (no shared prefix — the source's KV is gone)
+            if rid not in shadow and a.can_allocate(tokens):
+                a.allocate(rid, tokens)
+                shadow[rid] = a.owned(rid)
         else:  # free
             held = shadow.pop(rid, [])
             assert a.free(rid) == len(held)
@@ -89,6 +111,43 @@ def test_interleaved_share_fork_free_seeded():
         rng = random.Random(seed)
         run_ops(random_ops(rng, 120), num_blocks=rng.randrange(4, 48),
                 block_size=rng.randrange(1, 32))
+
+
+# fault-tolerance interleavings: crashes wipe, evacuations free in
+# bulk, retries re-allocate freed rids — conservation must hold through
+# every mix (the allocator-level shadow of Cluster.fail_instance /
+# quarantine_instance / transfer-retry recompute)
+CHAOS_OPS = OPS + ("evacuate", "crash", "retry")
+
+
+def random_chaos_ops(rng, n):
+    # faults are rare relative to normal traffic, as in the cluster
+    weights = [6, 6, 4, 4, 5, 1, 1, 2]
+    return [(rng.choices(CHAOS_OPS, weights)[0], rng.randrange(12),
+             rng.randrange(1, 400)) for _ in range(n)]
+
+
+def test_crash_evacuate_retry_interleavings_seeded():
+    for seed in range(25):
+        rng = random.Random(seed)
+        run_ops(random_chaos_ops(rng, 150),
+                num_blocks=rng.randrange(4, 48),
+                block_size=rng.randrange(1, 32))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(CHAOS_OPS),
+                              st.integers(0, 11), st.integers(1, 400)),
+                    max_size=120),
+           st.integers(4, 48), st.integers(1, 32))
+    def test_crash_evacuate_retry_interleavings_hypothesis(
+            ops, num_blocks, block_size):
+        run_ops(ops, num_blocks, block_size)
+except ImportError:                               # pragma: no cover
+    pass
 
 
 def test_eviction_never_drops_referenced():
