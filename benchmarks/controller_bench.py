@@ -88,6 +88,10 @@ def _run_one(sliders: Sliders, controller: bool):
         "slider_moves": st.slider_moves,
         "early_rejections": st.early_rejections,
         "moves": list(ctl.moves) if ctl else [],
+        # the decision audit trail: every epoch's input signals and
+        # either its actions or the reason it held — the artifact that
+        # explains every slider move above
+        "audit": list(ctl.audit) if ctl else [],
         "snapshots": loop.log.snapshots if ctl else [],
     }
 

@@ -56,6 +56,8 @@ from repro.core.latency import SLO, RunStats
 from repro.core.policies import BasePolicy
 from repro.engine.request import Request, State, TERMINAL_STATES
 from repro.serving import faults as flt
+from repro.serving.tracing import (PH_DECODE_WAIT, PH_QUEUE, PH_TRANSFER,
+                                   Tracer)
 
 ARRIVAL, ITER, TRANSFER, COMMIT, FAULT = 0, 1, 2, 3, 4
 
@@ -84,6 +86,9 @@ class Cluster:
     #: stubbing via ``__new__``) still see default recovery knobs
     ft: FaultToleranceConfig = FaultToleranceConfig()
     faults: Optional[flt.FaultInjector] = None
+    #: request-lifecycle tracer (wired by ``ServingLoop(tracing=...)``;
+    #: None = every tracing site below is inert)
+    tracer: Optional[Tracer] = None
 
     def __init__(self, policy: BasePolicy, cost: CostModel,
                  async_exec: bool = False,
@@ -150,6 +155,9 @@ class Cluster:
         req.n_migrations += 1
         moved = max(req.context_len - shared, 0)
         t = self.cost.transfer_time(moved)
+        if self.tracer is not None:
+            self.tracer.phase(req.rid, now, PH_TRANSFER, kind=kind,
+                              src=src.iid, dst=dst.iid, tokens=moved)
         self.transfer_count += 1
         self.transfer_bytes += self.cost.state_bytes(moved)
         checksum = (flt.payload_checksum(state)
@@ -252,6 +260,8 @@ class Cluster:
             return
         inst = self.policy.on_arrival(req, now)
         if inst is not None:
+            if self.tracer is not None:
+                self.tracer.event(req.rid, now, "route", iid=inst.iid)
             self._schedule_iter(inst, now)
             return
         recovered = req.n_recoveries > 0 or req.first_token_time is not None
@@ -265,6 +275,9 @@ class Cluster:
                         if i.schedulable and i.chunk_size > 0),
                        key=lambda i: i.queued_prefill_tokens())
             inst.enqueue_prefill(req)
+            if self.tracer is not None:
+                self.tracer.event(req.rid, now, "route", iid=inst.iid,
+                                  forced=True)
             self._schedule_iter(inst, now)
             return
         if not capacity:
@@ -313,6 +326,9 @@ class Cluster:
             self._retry_transfer(data, now)
             return
         dst.inject(req, state)
+        if self.tracer is not None:
+            self.tracer.phase(req.rid, now, PH_DECODE_WAIT,
+                              iid=dst.iid, via=move_kind)
         if move_kind == "backflow":
             req.reset_tpot_window()
             self.backflow_count += 1
@@ -385,6 +401,9 @@ class Cluster:
         victims = inst.evacuate()
         inst.wipe_cache()
         self.evacuated_requests += len(victims)
+        if self.tracer is not None:
+            self.tracer.global_event(now, "instance_crash", iid=inst.iid,
+                                     reason=reason, victims=len(victims))
         self._reroute_victims(victims, now, reason)
         return victims
 
@@ -405,6 +424,10 @@ class Cluster:
         self.quarantines += 1
         victims = inst.evacuate()
         self.evacuated_requests += len(victims)
+        if self.tracer is not None:
+            self.tracer.global_event(now, "instance_quarantined",
+                                     iid=inst.iid, reason=reason,
+                                     victims=len(victims))
         self._reroute_victims(victims, now, reason)
         return victims
 
@@ -416,6 +439,7 @@ class Cluster:
             return False
         inst.health = HEALTH_OK
         inst.stall_until = 0.0
+        inst.overrun = 0.0
         inst.last_progress = now
         inst.step_deadline = float("inf")
         self.instance_recoveries += 1
@@ -450,6 +474,10 @@ class Cluster:
         req.recompute_offset = req.output_len
         req.prefill_pos = -req.output_len
         req.state = State.QUEUED
+        if self.tracer is not None:
+            self.tracer.event(req.rid, now, "recovery", reason=reason,
+                              n=req.n_recoveries)
+            self.tracer.phase(req.rid, now, PH_QUEUE, reason=reason)
         self._handle(now, ARRIVAL, req)
 
     def _retry_transfer(self, data, now: float):
@@ -463,6 +491,10 @@ class Cluster:
             self.transfer_retries += 1
             delay = min(self.ft.transfer_backoff * (2 ** attempt),
                         self.ft.transfer_backoff_cap)
+            if self.tracer is not None and req is not None:
+                self.tracer.event(req.rid, now, "transfer_retry",
+                                  attempt=attempt + 1,
+                                  delay_s=round(delay, 6))
             self._push(now + delay, TRANSFER,
                        (req, dst, state, move_kind,
                         {**meta, "attempt": attempt + 1}))
@@ -570,6 +602,9 @@ class Cluster:
                 self._start_transfer(req, inst, target, end, "place")
             else:
                 target.admit_decode(req)
+                if self.tracer is not None:
+                    self.tracer.phase(req.rid, end, PH_DECODE_WAIT,
+                                      iid=target.iid, via="local")
                 self._schedule_iter(target, end)
         for (req, src, dst, is_backflow) in (
                 self.policy.select_migrations(end, inst)):

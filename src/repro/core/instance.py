@@ -149,6 +149,9 @@ class Instance:
         self.tpot_alpha = tpot_alpha
         self.last_horizon = 1
         self.horizon_peak = 1
+        # horizon distribution: planned K -> iteration count (telemetry
+        # gauge; shows where the adaptive pick actually operates)
+        self.horizon_hist: Dict[int, int] = {}
         # in-flight iteration (dispatch/commit split): (plan, pending
         # executor step or None, start time, modeled duration)
         self._inflight: Optional[tuple] = None
@@ -171,8 +174,15 @@ class Instance:
         self.stall_until: float = 0.0
         self.last_progress: float = 0.0
         self.step_deadline: float = float("inf")
+        #: worst dispatch-time stall overrun (actual - modeled duration)
+        #: since the watchdog last looked — the sync executor's
+        #: heartbeat signal (dispatch+commit are one atomic event there,
+        #: so a stale step_deadline is never observable mid-step)
+        self.overrun: float = 0.0
         self.fail_count: int = 0
         self.quarantine_count: int = 0
+        #: request-lifecycle tracer (wired by ServingLoop; None = off)
+        self.tracer = None
         # accounting
         self.busy_until: float = 0.0
         self.iterations: int = 0
@@ -275,7 +285,7 @@ class Instance:
     # ------------------------------------------------------------------
     # iteration
     # ------------------------------------------------------------------
-    def _try_admit_pending(self):
+    def _try_admit_pending(self, now: Optional[float] = None):
         while self.pending_decode and len(self.decoding) < self.max_decode_batch:
             req = self.pending_decode[0]
             need = req.context_len + 64           # headroom for growth
@@ -288,6 +298,8 @@ class Instance:
             self.decoding[req.rid] = req
             req.state = State.DECODE
             req.decode_instance = self.iid
+            if self.tracer is not None and now is not None:
+                self.tracer.phase(req.rid, now, "decode", iid=self.iid)
 
     def _pick_horizon(self, now: Optional[float] = None) -> int:
         """How many decode steps the next iteration may fuse.
@@ -326,7 +338,7 @@ class Instance:
         return k
 
     def build_plan(self, now: Optional[float] = None) -> IterationPlan:
-        self._try_admit_pending()
+        self._try_admit_pending(now)
         k = self._pick_horizon(now)
         decode_reqs: List[Request] = []
         budgets: List[int] = []
@@ -390,9 +402,12 @@ class Instance:
             # evict the longest-context decode; it re-prefills its whole
             # context (prompt + generated so far) later.
             victim = max(self.decoding.values(), key=lambda r: r.context_len)
-            self._preempt(victim)
+            self._preempt(victim, now)
             self.preemptions += 1
             return self.build_plan(now)
+        if not plan.empty():
+            self.horizon_hist[plan.horizon] = \
+                self.horizon_hist.get(plan.horizon, 0) + 1
         return plan
 
     def _admit_prefill(self, req: Request) -> bool:
@@ -440,7 +455,7 @@ class Instance:
         self.executor.add_request(req)
         return True
 
-    def _preempt(self, req: Request):
+    def _preempt(self, req: Request, now: Optional[float] = None):
         self.decoding.pop(req.rid, None)
         if self.allocator.holds(req.rid):
             self.allocator.free(req.rid)
@@ -451,6 +466,10 @@ class Instance:
         req.recompute_offset = req.output_len
         req.prefill_pos = -req.output_len
         req.state = State.QUEUED
+        if self.tracer is not None and now is not None:
+            self.tracer.event(req.rid, now, "preempt", iid=self.iid,
+                              ctx=req.context_len)
+            self.tracer.phase(req.rid, now, "queue", reason="preempt")
         self.prefill_queue.appendleft(req)
 
     def iteration_duration(self, plan: IterationPlan) -> float:
@@ -485,7 +504,15 @@ class Instance:
         self.last_progress = now
         self.step_deadline = now + dur
         if now < self.stall_until:
-            dur += self.stall_until - now
+            extra = self.stall_until - now
+            dur += extra
+            # the sync path commits in the same event, so the watchdog
+            # can never catch step_deadline mid-flight — record the
+            # overrun for its next sweep instead
+            self.overrun = max(self.overrun, extra)
+            if self.tracer is not None:
+                self.tracer.global_event(now, "stall", iid=self.iid,
+                                         extra_s=round(extra, 6))
         step_fn = getattr(self.executor, "step_async", None)
         # stage the plan BEFORE the executor call: if the step raises
         # (device fault), the fault handler's evacuation can still find
@@ -541,7 +568,15 @@ class Instance:
 
         prefill_done: List[Request] = []
         finished: List[Request] = []
+        tr = self.tracer
         for req, take in plan.prefill_items:
+            if tr is not None:
+                # phase opens at the chunk's dispatch time (same-phase
+                # transitions merge, so later chunks keep the start)
+                tr.phase(req.rid, t0, "prefill", iid=self.iid)
+                tr.event(req.rid, t0, "prefill_chunk", take=take,
+                         pos=req.prefill_pos,
+                         cached=req.cached_prefix_len)
             req.prefill_pos += take
             req.prefill_instance = (self.iid if req.prefill_instance is None
                                     else req.prefill_instance)
@@ -585,6 +620,13 @@ class Instance:
                 emit(req, t)
                 self.decode_token_count += 1
                 last_t[i] = t
+        if tr is not None:
+            for i, (req, c) in enumerate(zip(plan.decode_reqs, counts)):
+                # per-commit decode record: fused horizon K, tokens this
+                # commit actually produced, and the co-batched prefill
+                # tokens that slowed every step (interference)
+                tr.event(req.rid, last_t[i], "decode_commit", k=K,
+                         tokens=c, interference=plan.prefill_tokens)
         for i, req in enumerate(plan.decode_reqs):
             if eos.get(req.rid, False) or req.done():
                 req.state = State.FINISHED

@@ -451,6 +451,25 @@ class JaxExecutor:
 
         self._horizon_dense = _horizon_dense
 
+        # every jitted entry point, for the recompile gauge below
+        self._jitted = [_decode, _prefill_row, _decode_fused,
+                        _prefill_packed, _prefill_slot, _mixed_fused,
+                        _sample_batch, _horizon_paged, _horizon_dense]
+
+    def jit_compiles(self) -> int:
+        """Total traced-and-compiled variants across this executor's
+        jitted entry points (shape buckets x static args).  A steadily
+        climbing value under a steady workload is a recompile storm —
+        usually a shape-bucketing bug — and shows up here long before
+        it shows up in latency percentiles."""
+        n = 0
+        for fn in self._jitted:
+            try:
+                n += fn._cache_size()
+            except Exception:      # private API: absent on some versions
+                return -1
+        return n
+
     @property
     def horizon_capable(self) -> bool:
         """True when this executor can fuse K>1 decode steps: the paged

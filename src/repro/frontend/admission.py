@@ -74,6 +74,8 @@ class AdmissionQueue:
         self._pass: Dict[str, float] = {c: 0.0 for c in self.cfg.classes}
         self.enqueued = 0
         self.released = 0
+        self.released_by_class: Dict[str, int] = \
+            {c: 0 for c in self.cfg.classes}
         self.displaced = 0
         self.shed_count = 0
 
@@ -138,6 +140,7 @@ class AdmissionQueue:
             if self._pass[c] < floor:
                 self._pass[c] = floor
         self.released += 1
+        self.released_by_class[cls] += 1
         return self._q[cls].popleft()
 
     # ------------------------------------------------------------------
@@ -197,6 +200,7 @@ class AdmissionQueue:
             "oldest_wait_s": round(self.oldest_wait(now), 4),
             "enqueued_total": self.enqueued,
             "released_total": self.released,
+            "released_by_class": dict(self.released_by_class),
             "displaced_total": self.displaced,
             "shed_total": self.shed_count,
         }

@@ -146,8 +146,9 @@ class FrontendServer:
                       "no healthy instances")
             return Response(200 if healthy else 503, body=json.dumps(
                 {"status": status, "instances": insts}).encode())
-        if method == "GET" and path == "/metrics":
-            return Response(200, body=await self._metrics())
+        if method == "GET" and (path == "/metrics"
+                                or path.startswith("/metrics?")):
+            return self._metrics(headers, path)
         if path in (protocol.COMPLETIONS, protocol.CHAT_COMPLETIONS):
             if method != "POST":
                 return Response(405, body=protocol.ProtocolError(
@@ -160,19 +161,22 @@ class FrontendServer:
         return Response(404, body=protocol.ProtocolError(
             404, f"no route for {method} {path}").body())
 
-    async def _metrics(self) -> bytes:
-        """Serialize the loop's telemetry snapshot.  The engine thread
-        appends to the window's deques while we read — retry the rare
-        mutation-during-iteration race instead of adding a lock to the
-        token hot path."""
-        now = self.loop.receipt_now()
-        for _ in range(8):
-            try:
-                return json.dumps(self.loop.snapshot(now),
-                                  default=str).encode()
-            except RuntimeError:
-                await asyncio.sleep(0.005)
-        return json.dumps({"error": "snapshot contended"}).encode()
+    def _metrics(self, headers: dict, path: str) -> Response:
+        """Serialize the loop's telemetry snapshot.  The window's lock
+        makes the snapshot internally consistent against the engine
+        thread's event ingestion (the former retry-on-RuntimeError loop
+        is gone with it).  Content negotiation: JSON by default;
+        Prometheus exposition text when the client asks for text/plain
+        or OpenMetrics (or forces it with ``?format=prometheus``)."""
+        snap = self.loop.snapshot(self.loop.receipt_now())
+        accept = headers.get("accept", "")
+        if ("text/plain" in accept or "openmetrics" in accept
+                or "format=prometheus" in path):
+            from repro.serving.tracing import prometheus_text
+            return Response(
+                200, content_type="text/plain; version=0.0.4",
+                body=prometheus_text(snap).encode())
+        return Response(200, body=json.dumps(snap, default=str).encode())
 
     # ------------------------------------------------------------------
     # completion lifecycle

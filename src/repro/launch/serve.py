@@ -41,6 +41,30 @@ TINY = WorkloadSpec("tiny",
                     tokenized=True, vocab_size=4096)
 
 
+def _trace_config(args):
+    """--trace (or either output path) turns on lifecycle tracing."""
+    if not (args.trace or args.trace_out or args.trace_jsonl):
+        return None
+    from repro.serving import TraceConfig
+    return TraceConfig()
+
+
+def _dump_trace(loop, args, slo: SLO):
+    tr = getattr(loop, "tracer", None)
+    if tr is None:
+        return
+    if args.trace_out:
+        tr.dump_chrome(args.trace_out)
+        print(f"chrome trace -> {args.trace_out} "
+              "(open in ui.perfetto.dev)", flush=True)
+    if args.trace_jsonl:
+        tr.dump_jsonl(args.trace_jsonl)
+        print(f"trace jsonl -> {args.trace_jsonl}", flush=True)
+    print(json.dumps(
+        {"slo_violation_report": tr.violation_report(slo)},
+        indent=2, default=str))
+
+
 def _live_mode(args, slo: SLO):
     """Online runtime on the real engine (reduced config, CPU-runnable):
     tokens stream as they are computed, telemetry snapshots print as
@@ -87,8 +111,10 @@ def _live_mode(args, slo: SLO):
                                     max_new_tokens=32, limit=args.n),
         controller=ctl, window=args.window, on_token=on_token,
         snapshot_every=args.snapshot_every,
-        clock=WallClock() if args.pace else None, pace=args.pace)
+        clock=WallClock() if args.pace else None, pace=args.pace,
+        tracing=_trace_config(args))
     loop.run()
+    _dump_trace(loop, args, slo)
     for snap in loop.log.snapshots:
         print(json.dumps({k: v for k, v in snap.items()
                           if k != "instances"}))
@@ -135,7 +161,8 @@ def _serve_mode(args, slo: SLO):
         cluster, slo, clock=WallClock(), pace=True, controller=ctl,
         window=args.window,
         admission=AdmissionConfig(max_depth=args.adm_depth,
-                                  max_inflight=args.adm_inflight))
+                                  max_inflight=args.adm_inflight),
+        tracing=_trace_config(args))
     srv = FrontendServer(loop, FrontendConfig(
         host=host or "127.0.0.1", port=int(port), model=args.arch,
         tok_workers=args.tok_workers))
@@ -144,6 +171,7 @@ def _serve_mode(args, slo: SLO):
           "/v1/chat/completions; GET /healthz, /metrics", flush=True)
     srv.run(install_signals=True)
     print(json.dumps(loop.snapshot(), default=str))
+    _dump_trace(loop, args, slo)
 
 
 def main():
@@ -183,6 +211,16 @@ def main():
     ap.add_argument("--no-async", action="store_true",
                     help="live: disable the non-blocking dispatch/"
                          "commit executor pipeline")
+    # tracing knobs (live + serve modes)
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-request lifecycle traces and print "
+                         "an SLO violation attribution report")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="write a Chrome/Perfetto trace JSON after the "
+                         "run (implies --trace)")
+    ap.add_argument("--trace-jsonl", metavar="PATH", default=None,
+                    help="write the trace event log as JSON lines "
+                         "(implies --trace)")
     # network front-end knobs
     ap.add_argument("--serve", metavar="HOST:PORT", default=None,
                     help="run the OpenAI-compatible HTTP/SSE server on "

@@ -19,6 +19,9 @@ _EXPORTS = {
     "ServingLoop": "repro.serving.server",
     "SubmitMsg": "repro.serving.server",
     "WatchdogConfig": "repro.serving.server",
+    "TraceConfig": "repro.serving.tracing",
+    "Tracer": "repro.serving.tracing",
+    "prometheus_text": "repro.serving.tracing",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -77,6 +77,13 @@ class ControllerConfig:
     replicate_max_paths: int = 2     # hot paths exported per source
     replicate_min_hits: int = 3      # touch count before a path is hot
     replicate_max_blocks: int = 64   # per-epoch block budget per source
+    # ---- decision audit trail --------------------------------------
+    # one record per epoch: the input signals, every action taken (or
+    # the reason for holding), guard/tabu outcomes, and — filled in at
+    # the NEXT epoch — the observed effect.  Lightweight (a few dict
+    # appends per epoch), so on by default.
+    audit: bool = True
+    audit_max_epochs: int = 4096
 
 
 class SliderController:
@@ -89,6 +96,11 @@ class SliderController:
         self._hold_until = 0.0
         self._pending_eval: Optional[dict] = None   # last chunk move
         self._tabu: dict = {}            # direction -> embargo-until time
+        # decision audit trail: one record per epoch (see
+        # ControllerConfig.audit); the current epoch's record while
+        # ``on_epoch`` runs, so helpers can annotate it
+        self.audit: List[dict] = []
+        self._cur: Optional[dict] = None
 
     # ------------------------------------------------------------------
     def bind(self, loop):
@@ -121,8 +133,20 @@ class SliderController:
         return max((i.chunk_size for i in p), default=0)
 
     def _record(self, now: float, kind: str, **detail):
-        self.moves.append({"t": round(now, 3), "kind": kind, **detail})
+        mv = {"t": round(now, 3), "kind": kind, **detail}
+        self.moves.append(mv)
         self._hold_until = now + self.cfg.cooldown * self.cfg.epoch
+        if self._cur is not None:
+            self._cur["actions"].append(mv)
+        tr = getattr(self.loop, "tracer", None)
+        if tr is not None:
+            tr.global_event(now, "controller_" + kind, **detail)
+
+    def _note(self, key: str, val):
+        """Annotate the current epoch's audit record (no-op when the
+        audit is off)."""
+        if self._cur is not None:
+            self._cur[key] = val
 
     # ------------------------------------------------------------------
     def maybe_epoch(self, now: float):
@@ -143,28 +167,73 @@ class SliderController:
             now, self.loop.cluster.instances)
         att_tpot = (att_live if att_live is not None
                     else tele.tpot_attainment(now))
+        # close the loop on the PREVIOUS record: what the last decision
+        # actually did to the signals, captured before this epoch's
+        # queue-guard mutates them
+        if self.audit and "observed" not in self.audit[-1]:
+            self.audit[-1]["observed"] = {
+                "t": round(now, 3),
+                "ttft_att": att_ttft,
+                "tpot_att": att_tpot,
+                "goodput_rps": tele.goodput(now),
+            }
         low = self.cfg.target - self.cfg.deadband
         ttft_bad = att_ttft is not None and att_ttft < low
         tpot_bad = att_tpot is not None and att_tpot < low
         # the admission queue is a first-class controller signal: work
         # aging in the router queue IS prefill starvation, visible one
         # window earlier than the first-token stream it delays
+        queue_forced = False
         adm = getattr(self.loop, "admission", None)
         if adm is not None and len(adm) \
                 and adm.oldest_wait(now) > self.cfg.queue_guard \
                 * self.loop.slo.ttft:
             ttft_bad = True
+            queue_forced = True
             if att_ttft is None:
                 att_ttft = 0.0
+        n_evidence = len(tele._first) + len(tele._fin)
+        if self.cfg.audit:
+            rec = {
+                "t": round(now, 3),
+                "signals": {
+                    "ttft_att": att_ttft,
+                    "tpot_att": att_tpot,
+                    "tpot_inflight": att_live is not None,
+                    "ttft_bad": ttft_bad,
+                    "tpot_bad": tpot_bad,
+                    "queue_forced": queue_forced,
+                    "queue_depth": len(adm) if adm is not None else 0,
+                    "queue_oldest_wait_s": (
+                        round(adm.oldest_wait(now), 3)
+                        if adm is not None and len(adm) else 0.0),
+                    "s_d": self._current_sd(),
+                    "s_p": self._current_sp(),
+                    "n_p": len(self._instances(P_HEAVY)),
+                    "n_d": len(self._instances(D_HEAVY)),
+                    "evidence": n_evidence,
+                },
+                "actions": [],
+            }
+            self.audit.append(rec)
+            if len(self.audit) > self.cfg.audit_max_epochs:
+                del self.audit[0]
+            self._cur = rec
+        else:
+            self._cur = None
         self._evaluate_last_move(now, ttft_bad, tpot_bad)
         if self.cfg.replicate:
             # orthogonal to slider motion: replication never reconfigures
             # roles, so it runs regardless of cooldown or staged flips
             self._replicate_hot(now)
-        if now < self._hold_until or self._flip_in_progress():
+        if now < self._hold_until:
+            self._note("hold", "cooldown")
             return
-        n_evidence = len(tele._first) + len(tele._fin)
+        if self._flip_in_progress():
+            self._note("hold", "flip_in_progress")
+            return
         if n_evidence < self.cfg.min_evidence:
+            self._note("hold", "insufficient_evidence")
             return
         if ttft_bad and tpot_bad:
             # saturated on both axes: sliders cannot conjure capacity —
@@ -176,12 +245,17 @@ class SliderController:
             self._more_prefill(now, att_ttft)
         elif tpot_bad:
             self._more_decode(now, att_tpot)
+        else:
+            self._note("hold", "within_deadband")
 
     def _shed(self, now: float, att_ttft, att_tpot):
+        self._note("branch", "saturated_both")
         if not self.cfg.shed:
+            self._note("hold", "shed_disabled")
             return
         shed_fn = getattr(self.loop, "shed_admission", None)
         if shed_fn is None:
+            self._note("hold", "no_admission_queue")
             return
         n = shed_fn(self.cfg.shed_fraction)
         if n:
@@ -264,6 +338,10 @@ class SliderController:
         tpot_headroom = (p90 is None
                          or p90 < cfg.tpot_guard * self.loop.slo.tpot)
         higher = [s for s in higher if not sp or s <= sp]
+        self._note("guards", {"branch": "more_prefill",
+                              "tpot_headroom": tpot_headroom,
+                              "tabu_up": self._tabued("up", now),
+                              "sd_at_ceiling": not higher})
         if higher and tpot_headroom and not self._tabued("up", now):
             # cratered TTFT jumps the ladder (mirror of _more_decode)
             to = higher[-1] if att < cfg.target / 2 else higher[0]
@@ -278,6 +356,8 @@ class SliderController:
             if self.loop.flip_role(inst, P_HEAVY, sp or max(cfg.sd_steps)):
                 self._record(now, "flip", iid=inst.iid, to=P_HEAVY,
                              why=f"ttft_att={att:.2f}")
+                return
+        self._note("hold", "at_role_floor")
 
     def _more_decode(self, now: float, att: float):
         """Disaggregation-ward: S_D down, then P->D flip.  A cratered
@@ -287,6 +367,9 @@ class SliderController:
         cfg = self.cfg
         sd = self._current_sd()
         lower = [s for s in cfg.sd_steps if s < sd]
+        self._note("guards", {"branch": "more_decode",
+                              "tabu_down": self._tabued("down", now),
+                              "sd_at_floor": not lower})
         if lower and not self._tabued("down", now):
             to = lower[0] if att < cfg.target / 2 else lower[-1]
             if self.loop.set_chunks(D_HEAVY, to):
@@ -304,3 +387,5 @@ class SliderController:
             if self.loop.flip_role(inst, D_HEAVY, new_sd):
                 self._record(now, "flip", iid=inst.iid, to=D_HEAVY,
                              why=f"tpot_att={att:.2f}")
+                return
+        self._note("hold", "at_role_floor")

@@ -53,6 +53,13 @@ class TelemetryWindow:
         # window time, so they are bounded by count, not trimmed)
         self._wire: deque = deque(maxlen=4096)   # (dt,)
         self._wire_lock = threading.Lock()
+        # consistency lock for the window deques and lifetime counters:
+        # mutators run on the engine thread, but ``/metrics`` snapshots
+        # from the HTTP thread — without the lock a snapshot could read
+        # ``total_finished`` and ``total_ok`` across a finish event, or
+        # trip "deque mutated during iteration".  Reentrant because
+        # ``snapshot`` calls the locked stat readers.
+        self._lock = threading.RLock()
         # lifetime counters
         self.total_first = 0
         self.total_tokens = 0
@@ -88,54 +95,61 @@ class TelemetryWindow:
         return max(min(self.window, now - self._anchor), 1e-9)
 
     def on_token(self, req: Request, t: float):
-        self.anchor(t)
-        self._tokens.append((t,))
-        self.total_tokens += 1
-        if req.output_len == 1:          # this token WAS the first token
-            self._first.append((t, req.ttft()))
-            self.total_first += 1
+        with self._lock:
+            self.anchor(t)
+            self._tokens.append((t,))
+            self.total_tokens += 1
+            if req.output_len == 1:      # this token WAS the first token
+                self._first.append((t, req.ttft()))
+                self.total_first += 1
 
     def on_finish(self, req: Request, t: float):
-        self.anchor(t)
-        ok = self.slo.satisfied(req)
-        self._fin.append((t, req.tpot(), ok))
-        self.total_finished += 1
-        self.total_ok += int(ok)
-        if getattr(req, "n_recoveries", 0) > 0:
-            self.total_recovered += 1
-            self.total_recovered_ok += int(ok)
+        with self._lock:
+            self.anchor(t)
+            ok = self.slo.satisfied(req)
+            self._fin.append((t, req.tpot(), ok))
+            self.total_finished += 1
+            self.total_ok += int(ok)
+            if getattr(req, "n_recoveries", 0) > 0:
+                self.total_recovered += 1
+                self.total_recovered_ok += int(ok)
 
     def on_reject(self, req: Request, t: float):
-        self.anchor(t)
-        self._rej.append((t,))
-        self.total_rejected += 1
+        with self._lock:
+            self.anchor(t)
+            self._rej.append((t,))
+            self.total_rejected += 1
 
     def on_cancel(self, req: Request, t: float):
         """Graceful-drain cancellation (still queued at shutdown) —
         counted separately from rejection: the server chose to stop,
         the request did not fail admission."""
-        self.anchor(t)
-        self.total_cancelled += 1
+        with self._lock:
+            self.anchor(t)
+            self.total_cancelled += 1
 
     def on_abort(self, req: Request, t: float):
         """Client-initiated abort (disconnect propagation): the request
         left the system by the client's choice — neither a finish nor a
         rejection."""
-        self.anchor(t)
-        self.total_aborted += 1
+        with self._lock:
+            self.anchor(t)
+            self.total_aborted += 1
 
     def on_failed(self, req: Request, t: float):
         """Unrecoverable fault outcome (fail-stop crash loss, transfer
         retries exhausted, recovery loop bound)."""
-        self.anchor(t)
-        self.total_failed += 1
+        with self._lock:
+            self.anchor(t)
+            self.total_failed += 1
 
     def on_queue_wait(self, t: float, wait: float):
         """Admission-queue span: seconds between a request's arrival
         and its release into the cluster."""
-        self.anchor(t)
-        self._qwait.append((t, wait))
-        self.total_queue_waits += 1
+        with self._lock:
+            self.anchor(t)
+            self._qwait.append((t, wait))
+            self.total_queue_waits += 1
 
     def record_wire(self, dt: float):
         """Wire span: engine token event -> socket write (thread-safe;
@@ -158,23 +172,48 @@ class TelemetryWindow:
         """Share of windowed first tokens inside the TTFT SLO (None when
         the window saw no first tokens — the controller treats that as
         'no evidence', not 'perfect')."""
-        self._trim(now)
-        if not self._first:
-            return None
-        return sum(v <= self.slo.ttft for _, v in self._first) \
-            / len(self._first)
+        with self._lock:
+            self._trim(now)
+            if not self._first:
+                return None
+            return sum(v <= self.slo.ttft for _, v in self._first) \
+                / len(self._first)
 
     def tpot_attainment(self, now: float) -> Optional[float]:
-        self._trim(now)
-        if not self._fin:
-            return None
-        return sum(tp is None or tp <= self.slo.tpot
-                   for _, tp, _ in self._fin) / len(self._fin)
+        with self._lock:
+            self._trim(now)
+            if not self._fin:
+                return None
+            return sum(tp is None or tp <= self.slo.tpot
+                       for _, tp, _ in self._fin) / len(self._fin)
 
     def goodput(self, now: float) -> float:
         """SLO-attained finishes per second over the window."""
-        self._trim(now)
-        return sum(ok for _, _, ok in self._fin) / self._span(now)
+        with self._lock:
+            self._trim(now)
+            return sum(ok for _, _, ok in self._fin) / self._span(now)
+
+    @staticmethod
+    def _decode_tpots(now: float, instances: Sequence) -> List[float]:
+        """Current TPOTs of the in-flight decode population.  The
+        ``decoding`` dicts belong to the engine thread and are NOT under
+        this window's lock, so a concurrent snapshot can see them mutate
+        mid-iteration — retry the (cheap) list() a bounded number of
+        times and settle for the instance's last consistent view."""
+        vals: List[float] = []
+        for inst in instances:
+            reqs: List = []
+            for _ in range(8):
+                try:
+                    reqs = list(inst.decoding.values())
+                    break
+                except RuntimeError:
+                    continue
+            for r in reqs:
+                tp = r.current_tpot(now)
+                if tp is not None:
+                    vals.append(tp)
+        return vals
 
     def tpot_inflight_attainment(self, now: float,
                                  instances: Sequence) -> Optional[float]:
@@ -183,39 +222,35 @@ class TelemetryWindow:
         whole generation (several seconds); this is the controller's
         early-warning signal — it moves the moment a decode population
         starts slipping, not after it has already failed."""
-        vals = []
-        for inst in instances:
-            for r in inst.decoding.values():
-                tp = r.current_tpot(now)
-                if tp is not None:
-                    vals.append(tp)
+        vals = self._decode_tpots(now, instances)
         if not vals:
             return None
         return sum(v <= self.slo.tpot for v in vals) / len(vals)
 
     def p90_tpot_inflight(self, now: float,
                           instances: Sequence) -> Optional[float]:
-        vals = [tp for inst in instances
-                for r in inst.decoding.values()
-                if (tp := r.current_tpot(now)) is not None]
+        vals = self._decode_tpots(now, instances)
         return float(np.percentile(vals, 90)) if vals else None
 
     def p90_ttft(self, now: float) -> Optional[float]:
-        self._trim(now)
-        if not self._first:
-            return None
-        return float(np.percentile([v for _, v in self._first], 90))
+        with self._lock:
+            self._trim(now)
+            if not self._first:
+                return None
+            return float(np.percentile([v for _, v in self._first], 90))
 
     def p90_tpot(self, now: float) -> Optional[float]:
-        self._trim(now)
-        xs = [tp for _, tp, _ in self._fin if tp is not None]
-        return float(np.percentile(xs, 90)) if xs else None
+        with self._lock:
+            self._trim(now)
+            xs = [tp for _, tp, _ in self._fin if tp is not None]
+            return float(np.percentile(xs, 90)) if xs else None
 
     def queue_wait_stats(self, now: float) -> Optional[dict]:
         """Windowed admission-queue wait percentiles (None before any
         release went through the queue)."""
-        self._trim(now)
-        xs = [w for _, w in self._qwait]
+        with self._lock:
+            self._trim(now)
+            xs = [w for _, w in self._qwait]
         if not xs:
             return None
         return {"p50_s": round(float(np.percentile(xs, 50)), 5),
@@ -239,6 +274,13 @@ class TelemetryWindow:
     def snapshot(self, now: float,
                  instances: Sequence = (),
                  admission=None) -> dict:
+        # one lock hold for the whole snapshot: every scalar inside is
+        # mutually consistent (finished_total/slo_ok_total never tear)
+        with self._lock:
+            return self._snapshot_locked(now, instances, admission)
+
+    def _snapshot_locked(self, now: float, instances: Sequence,
+                         admission) -> dict:
         self._trim(now)
         span = self._span(now)
         snap = {
@@ -313,6 +355,25 @@ class TelemetryWindow:
         health = getattr(inst, "health", "ok")
         if health != "ok":             # healthy runs snapshot unchanged
             gauges["health"] = health
+        # engine-executor hot-path counters (absent on SimExecutor, so
+        # simulator snapshots keep their shape): host<->device readbacks
+        # and blocking syncs per run, horizon batch stats, and the jit
+        # cache size — a recompile storm shows up here long before it
+        # shows up as latency
+        ex = getattr(inst, "executor", None)
+        if ex is not None and hasattr(ex, "host_readbacks"):
+            ex_g = {"host_readbacks": ex.host_readbacks,
+                    "host_syncs": ex.host_syncs,
+                    "horizon_calls": ex.horizon_calls,
+                    "horizon_tokens": ex.horizon_tokens}
+            jc = getattr(ex, "jit_compiles", None)
+            if jc is not None and (n := jc()) >= 0:
+                ex_g["jit_compiles"] = n
+            gauges["exec"] = ex_g
+        hist = getattr(inst, "horizon_hist", None)
+        if hist:
+            gauges["horizon_hist"] = {str(k): v
+                                      for k, v in sorted(hist.items())}
         pc = getattr(inst, "prefix_cache", None)
         if pc is not None and getattr(pc, "spill", None) is not None:
             gauges["spilled_blocks"] = len(pc.spill)

@@ -38,6 +38,8 @@ from repro.frontend.admission import AdmissionConfig, AdmissionQueue
 from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.faults import FaultInjector
 from repro.serving.metrics import MetricsLog, TelemetryWindow
+from repro.serving.tracing import (PH_ADMISSION, PH_QUEUE, TraceConfig,
+                                   Tracer)
 
 _DONE_STATES = (State.FINISHED, State.REJECTED, State.CANCELLED,
                 State.FAILED)
@@ -145,7 +147,8 @@ class ServingLoop:
                  pace: bool = False, steal: bool = True,
                  admission: Optional[AdmissionConfig] = None,
                  watchdog: Optional[WatchdogConfig] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 tracing: Optional[TraceConfig] = None):
         self.cluster = cluster
         self.slo = slo
         self.clock = clock or VirtualClock()
@@ -186,6 +189,17 @@ class ServingLoop:
         self._strikes: Dict[int, int] = {}
         self.aborted_count = 0
         self.failed_count = 0
+        # request-lifecycle tracing (off by default: every call site
+        # guards on ``tracer is None``, so an untraced run takes the
+        # exact pre-tracing path)
+        if tracing is None:
+            self.tracer: Optional[Tracer] = None
+        else:
+            self.tracer = (tracing if isinstance(tracing, Tracer)
+                           else Tracer(tracing))
+            cluster.tracer = self.tracer
+            for inst in cluster.instances:
+                inst.tracer = self.tracer
         for inst in cluster.instances:
             inst.token_sink = self._token_sink
         cluster.on_finish = self._on_finish
@@ -225,6 +239,10 @@ class ServingLoop:
         handle = RequestHandle(req, on_token)
         self._handles[req.rid] = handle
         self.requests.append(req)
+        if self.tracer is not None:
+            self.tracer.begin(req, req.arrival,
+                              PH_ADMISSION if self.admission is not None
+                              else PH_QUEUE)
         if self.admission is not None:
             self._enqueue_admission(req, priority)
         else:
@@ -276,6 +294,9 @@ class ServingLoop:
             self._released.add(entry.req.rid)
             self.telemetry.on_queue_wait(
                 now, max(now - entry.enq_time, 0.0))
+            if self.tracer is not None:
+                self.tracer.phase(entry.req.rid, now, PH_QUEUE,
+                                  cls=entry.cls)
             self.cluster.submit(entry.req,
                                 t=max(entry.req.arrival, now))
 
@@ -292,6 +313,8 @@ class ServingLoop:
         else:
             self.cancelled_count += 1
             self.telemetry.on_cancel(req, now)
+        if self.tracer is not None:
+            self.tracer.finish(req, now)
         handle = self._handles.get(req.rid)
         if handle is not None:
             handle._resolve()
@@ -309,6 +332,9 @@ class ServingLoop:
             self.log.record_event(self.cluster.now, "shed", {
                 "count": len(entries),
                 "classes": sorted({e.cls for e in entries})})
+            if self.tracer is not None:
+                self.tracer.global_event(self.cluster.now, "shed",
+                                         count=len(entries))
         return len(entries)
 
     def cancel_queued(self) -> int:
@@ -429,6 +455,8 @@ class ServingLoop:
                 req.finish_time = now
                 self.aborted_count += 1
                 self.telemetry.on_abort(req, now)
+                if self.tracer is not None:
+                    self.tracer.finish(req, now)
                 handle._resolve()
                 return True
         return self.cluster.abort_request(req)
@@ -436,6 +464,10 @@ class ServingLoop:
     def _retire(self, req: Request):
         """A released request left the system: free its admission slot
         (pulling the next queued request in) and resolve its handle."""
+        if self.tracer is not None:
+            self.tracer.finish(req, req.finish_time
+                               if req.finish_time is not None
+                               else self.cluster.now)
         if req.rid in self._released:
             self._released.discard(req.rid)
             self._inflight -= 1
@@ -517,6 +549,16 @@ class ServingLoop:
             if inst.health == HEALTH_OK:
                 if now > inst.step_deadline + wd.heartbeat_timeout:
                     self._quarantine(inst, now, "heartbeat")
+                elif inst.overrun > wd.heartbeat_timeout:
+                    # sync-executor heartbeat: dispatch+commit happen in
+                    # one atomic event, so a stall never leaves a live
+                    # step_deadline behind for the sweep above to catch.
+                    # The instance records how far each dispatch ran
+                    # past its cost-model duration; an overrun past the
+                    # timeout is the same missed heartbeat, observed
+                    # after the fact.
+                    inst.overrun = 0.0
+                    self._quarantine(inst, now, "overrun")
             elif inst.health == HEALTH_QUARANTINED:
                 until = self._probation_until.get(inst.iid)
                 if until is None:          # cluster-initiated quarantine
@@ -526,6 +568,9 @@ class ServingLoop:
                     self._probation_until.pop(inst.iid, None)
                     self.log.record_event(now, "readmit",
                                           {"iid": inst.iid})
+                    if self.tracer is not None:
+                        self.tracer.global_event(now, "readmit",
+                                                 iid=inst.iid)
 
     def _stall_check(self) -> bool:
         """Live-path stall guard: when the next event is a COMMIT whose
