@@ -9,12 +9,17 @@ the identical arrival trace and schedule:
   retry with backoff and fall back to recompute.
 * ``fail_stop`` — ``FaultToleranceConfig.fail_stop()``: victims resolve
   FAILED, transfers never retry.
+* ``warm`` — same fault tolerance as ``recovery`` plus
+  ``RecoveryConfig(enable=True)``: crash victims resume from their
+  latest progress checkpoint instead of recomputing from token 0.
 
-Both runs lose the same instance for the same window and eat the same
-stalls, so the goodput delta isolates exactly what request-level
-recovery buys.  The sim is seed-deterministic, so the acceptance floor
-(recovery strictly beats fail-stop goodput, and fail-stop actually
-failed requests — the schedule really bit) reproduces across machines.
+All runs lose the same instance for the same window and eat the same
+stalls, so the goodput deltas isolate exactly what request-level
+recovery — and then warm recovery on top — buys.  The sim is
+seed-deterministic, so the acceptance floors (recovery strictly beats
+fail-stop goodput, warm recovery at least matches cold, and fail-stop
+actually failed requests — the schedule really bit) reproduce across
+machines.
 
 Emits CSV rows via benchmarks.common.emit and JSON to
 benchmarks/out/chaos_bench.json; the slow-CI regression gate
@@ -32,6 +37,7 @@ from repro.engine.request import State
 from repro.serving import ServingLoop
 from repro.serving.faults import (CRASH, RECOVER, STALL, Fault,
                                   FaultInjector)
+from repro.serving.recovery import RecoveryConfig
 from repro.sim.simulator import ServingConfig, build_cluster
 from repro.sim.workload import DRIFT
 
@@ -61,10 +67,11 @@ def _schedule():
     ])
 
 
-def _run_one(ft: FaultToleranceConfig) -> dict:
+def _run_one(ft: FaultToleranceConfig, recovery=None) -> dict:
     sc = ServingConfig(model=MODEL, tp=TP, policy="taichi",
                        sliders=SLIDERS, hbm_blocks=HBM_BLOCKS)
-    cluster = build_cluster(sc, SLO_CHAOS, seed=SEED, ft=ft)
+    cluster = build_cluster(sc, SLO_CHAOS, seed=SEED, ft=ft,
+                            recovery=recovery)
     cluster.attach_faults(_schedule())
     loop = ServingLoop(cluster, SLO_CHAOS,
                        arrivals=DRIFT.iter_requests(QPS, seed=SEED,
@@ -76,7 +83,7 @@ def _run_one(ft: FaultToleranceConfig) -> dict:
              for r in reqs)
     fc = cluster.fault_counters()
     snap = loop.snapshot()
-    return {
+    out = {
         "n": len(reqs), "ok": ok,
         "goodput_rps": round(ok / DRIFT.total_duration, 4),
         "attainment": round(ok / max(len(reqs), 1), 4),
@@ -88,6 +95,13 @@ def _run_one(ft: FaultToleranceConfig) -> dict:
         "instance_failures": fc["instance_failures"],
         "instance_recoveries": fc["instance_recoveries"],
     }
+    if "recovery" in snap:
+        rc = snap["recovery"]
+        out["warm_restores"] = rc["warm_restores"]
+        out["warm_restored_tokens"] = rc["warm_restored_tokens"]
+        out["warm_fallbacks"] = rc["warm_fallbacks"]
+        out["checkpoints"] = rc["checkpoints"]
+    return out
 
 
 def run():
@@ -98,10 +112,12 @@ def run():
                             for f in _schedule().schedule],
                "variants": {}}
     agg = {}
-    for name, ft in (("recovery", FaultToleranceConfig()),
-                     ("fail_stop", FaultToleranceConfig.fail_stop())):
+    for name, ft, rec in (
+            ("recovery", FaultToleranceConfig(), None),
+            ("fail_stop", FaultToleranceConfig.fail_stop(), None),
+            ("warm", FaultToleranceConfig(), RecoveryConfig(enable=True))):
         t0 = time.time()
-        r = _run_one(ft)
+        r = _run_one(ft, recovery=rec)
         agg[name] = r
         results["variants"][name] = dict(r, wall_s=round(time.time() - t0, 1))
         emit(f"chaos.{name}", results["variants"][name]["wall_s"] * 1e6,
@@ -109,20 +125,32 @@ def run():
              f"failed={r['failed']};evacuated={r['evacuated']};"
              f"recovered={r['recovered']}")
 
-    on, off = agg["recovery"], agg["fail_stop"]
+    on, off, warm = agg["recovery"], agg["fail_stop"], agg["warm"]
     gain = on["goodput_rps"] / max(off["goodput_rps"], 1e-9)
+    warm_gain = warm["goodput_rps"] / max(on["goodput_rps"], 1e-9)
     results["summary"] = {
         "recovery_goodput_gain": round(gain, 4),
         "failstop_failed": off["failed"],
         "recovery_failed": on["failed"],
+        "warm_goodput_gain": round(warm_gain, 4),
+        "warm_restores": warm.get("warm_restores", 0),
+        "warm_restored_tokens": warm.get("warm_restored_tokens", 0),
     }
     emit("chaos.recovery_goodput_gain", 0.0,
          f"x={gain:.3f};floor=1.0;failstop_failed={off['failed']}")
+    emit("chaos.warm_goodput_gain", 0.0,
+         f"x={warm_gain:.3f};floor=1.0;"
+         f"warm_restores={warm.get('warm_restores', 0)}")
     path = write_json("chaos_bench", results)
     assert gain > 1.0, (
         f"recovery-on must strictly beat fail-stop goodput (got {gain:.3f}; "
         f"see {path})")
     assert off["failed"] > 0, "the fixed schedule never failed a request"
+    assert warm_gain >= 1.0, (
+        f"warm recovery must not lose goodput vs cold recompute "
+        f"(got {warm_gain:.3f}; see {path})")
+    assert warm.get("warm_restores", 0) > 0, \
+        "the fixed crash never produced a warm restore"
 
 
 if __name__ == "__main__":

@@ -132,6 +132,12 @@ def check_chaos(path: str) -> int:
     if n_failed <= 0:
         failures.append("the fault schedule never failed a fail-stop "
                         "request — the bench lost its signal")
+    wg = s["warm_goodput_gain"]
+    status = "ok" if wg >= 1.0 else "REGRESSION"
+    print(f"{'warm_goodput_gain':>26}: {wg:.3f} (floor 1.0) {status}")
+    if wg < 1.0:
+        failures.append(f"warm_goodput_gain {wg:.3f} < 1.0 — warm "
+                        "recovery lost goodput vs cold recompute")
     if failures:
         print("\nFAIL:\n  " + "\n  ".join(failures))
         return 1

@@ -88,6 +88,15 @@ class HostSpillPool:
             run.append((h, entry[1]))
         return run
 
+    def touch(self, chain: int) -> bool:
+        """Refresh an entry's LRU recency without re-copying its
+        payload (incremental checkpoint capture: present blocks are
+        touched, only absent ones are exported again)."""
+        if chain not in self._entries:
+            return False
+        self._entries.move_to_end(chain)
+        return True
+
     def take(self, chain: int):
         """Remove an entry and return its payload (block promoted back
         to HBM — if it is evicted again it simply re-spills)."""

@@ -56,6 +56,7 @@ from repro.core.latency import SLO, RunStats
 from repro.core.policies import BasePolicy
 from repro.engine.request import Request, State, TERMINAL_STATES
 from repro.serving import faults as flt
+from repro.serving.recovery import RecoveryConfig, RecoveryManager
 from repro.serving.tracing import (PH_DECODE_WAIT, PH_QUEUE, PH_TRANSFER,
                                    Tracer)
 
@@ -89,10 +90,14 @@ class Cluster:
     #: request-lifecycle tracer (wired by ``ServingLoop(tracing=...)``;
     #: None = every tracing site below is inert)
     tracer: Optional[Tracer] = None
+    #: warm-recovery manager (checkpoints + post-crash re-replication);
+    #: None = every recovery site below is inert
+    recovery: Optional[RecoveryManager] = None
 
     def __init__(self, policy: BasePolicy, cost: CostModel,
                  async_exec: bool = False,
-                 ft: Optional[FaultToleranceConfig] = None):
+                 ft: Optional[FaultToleranceConfig] = None,
+                 recovery=None):
         self.async_exec = async_exec
         self.policy = policy
         self.cost = cost
@@ -118,6 +123,13 @@ class Cluster:
         # fault tolerance
         self.ft = ft or FaultToleranceConfig()
         self.faults: Optional[flt.FaultInjector] = None
+        # warm recovery: accept a RecoveryConfig or a prebuilt manager;
+        # a disabled config leaves the attribute None so every hook
+        # below short-circuits (bit-identical to recovery-less runs)
+        if isinstance(recovery, RecoveryConfig):
+            recovery = RecoveryManager(recovery) if recovery.enable \
+                else None
+        self.recovery: Optional[RecoveryManager] = recovery
         self._aborting: Dict[int, Request] = {}
         self.instance_failures = 0
         self.instance_recoveries = 0
@@ -182,7 +194,8 @@ class Cluster:
         self.replication_bytes += self.cost.state_bytes(moved)
         self._push(now + t, TRANSFER,
                    (None, dst, state, "replicate",
-                    {"attempt": 0, "checksum": None, "delay": t}))
+                    {"attempt": 0, "checksum": None, "delay": t,
+                     "src": src.iid}))
         return True
 
     # ------------------------------------------------------------------
@@ -298,6 +311,12 @@ class Cluster:
             if self._transfer_outcome() == flt.DELIVER \
                     and dst.health == HEALTH_OK:
                 dst.replicate_in(state)
+                if self.recovery is not None:
+                    # replica-placement registry: a crashed holder's
+                    # paths re-replicate immediately instead of waiting
+                    # for the controller's next epoch
+                    self.recovery.on_replica_landed(
+                        state["tokens"], meta.get("src"), dst.iid)
             return
         if req.rid in self._aborting:      # client hung up mid-flight
             self._finish_abort(req, now)
@@ -345,6 +364,9 @@ class Cluster:
             return
         dur, prefill_done, finished = inst.run_iteration(now)
         end = now + dur
+        if self.recovery is not None:
+            for req in finished:
+                self.recovery.drop(req.rid)
         if self.on_finish is not None:
             for req in finished:
                 # a request EOSing mid-horizon finished at its last
@@ -405,6 +427,8 @@ class Cluster:
             self.tracer.global_event(now, "instance_crash", iid=inst.iid,
                                      reason=reason, victims=len(victims))
         self._reroute_victims(victims, now, reason)
+        if self.recovery is not None:
+            self.recovery.on_instance_failed(self, inst, now)
         return victims
 
     def quarantine_instance(self, inst: Instance,
@@ -472,12 +496,26 @@ class Cluster:
             self._fail_request(req, now, "transfer_failed")
             return
         req.recompute_offset = req.output_len
-        req.prefill_pos = -req.output_len
+        # warm recovery: resume from the latest checkpoint instead of
+        # recomputing from token 0 (the admitting instance consumes the
+        # plan and may still fall back cold if it cannot host it)
+        rs = (self.recovery.plan_restore(req)
+              if self.recovery is not None else None)
+        if rs is not None:
+            req.restore_state = rs
+            req.prefill_pos = rs["pos"] - req.output_len
+        else:
+            req.prefill_pos = -req.output_len
         req.state = State.QUEUED
         if self.tracer is not None:
-            self.tracer.event(req.rid, now, "recovery", reason=reason,
-                              n=req.n_recoveries)
-            self.tracer.phase(req.rid, now, PH_QUEUE, reason=reason)
+            ekw = {"reason": reason, "n": req.n_recoveries}
+            pkw = {"reason": reason}
+            if rs is not None:           # keys only appear when warm, so
+                ekw.update(warm=True,    # recovery-off traces stay
+                           resumed_from=rs["pos"])  # bit-identical
+                pkw.update(recovery="warm")
+            self.tracer.event(req.rid, now, "recovery", **ekw)
+            self.tracer.phase(req.rid, now, PH_QUEUE, **pkw)
         self._handle(now, ARRIVAL, req)
 
     def _retry_transfer(self, data, now: float):
@@ -489,15 +527,27 @@ class Cluster:
         attempt = meta.get("attempt", 0)
         if attempt < self.ft.transfer_max_retries:
             self.transfer_retries += 1
-            delay = min(self.ft.transfer_backoff * (2 ** attempt),
-                        self.ft.transfer_backoff_cap)
+            if self.faults is not None:
+                # seeded decorrelated jitter: concurrent transfers that
+                # failed together must not retry in lockstep (a capped
+                # pure exponential re-synchronizes the storm).  Only
+                # reachable with an injector attached — faults-off runs
+                # never retry, so they stay bit-identical.
+                delay = self.faults.retry_jitter(
+                    self.ft.transfer_backoff,
+                    meta.get("backoff", self.ft.transfer_backoff),
+                    self.ft.transfer_backoff_cap)
+            else:
+                delay = min(self.ft.transfer_backoff * (2 ** attempt),
+                            self.ft.transfer_backoff_cap)
             if self.tracer is not None and req is not None:
                 self.tracer.event(req.rid, now, "transfer_retry",
                                   attempt=attempt + 1,
                                   delay_s=round(delay, 6))
             self._push(now + delay, TRANSFER,
                        (req, dst, state, move_kind,
-                        {**meta, "attempt": attempt + 1}))
+                        {**meta, "attempt": attempt + 1,
+                         "backoff": delay}))
             return
         if req is None:
             return                          # replicas are best-effort
@@ -510,6 +560,8 @@ class Cluster:
         req.finish_time = now
         self.failed_count += 1
         self._aborting.pop(req.rid, None)
+        if self.recovery is not None:
+            self.recovery.drop(req.rid)
         if self.on_failed is not None:
             self.on_failed(req, now)
 
@@ -565,6 +617,8 @@ class Cluster:
         req.finish_reason = "abort"
         req.finish_time = now
         self.aborted_count += 1
+        if self.recovery is not None:
+            self.recovery.drop(req.rid)
         if self.on_abort is not None:
             self.on_abort(req, now)
 
@@ -589,12 +643,29 @@ class Cluster:
             "aborted": self.aborted_count,
         }
 
+    def recovery_counters(self) -> dict:
+        """Warm-recovery observability: manager counters plus the warm
+        restore/fallback tallies summed over instances."""
+        out = (self.recovery.counters()
+               if self.recovery is not None else {})
+        out["warm_restores"] = sum(
+            i.warm_restores for i in self.instances)
+        out["warm_restored_tokens"] = sum(
+            i.warm_restored_tokens for i in self.instances)
+        out["warm_fallbacks"] = sum(
+            i.warm_fallbacks for i in self.instances)
+        return out
+
     def _post_iteration(self, inst: Instance, end: float, dur: float,
                         prefill_done, reschedule: bool = True):
         """Scheduling phase shared by the synchronous ITER and the async
         COMMIT: route finished prefills, run Algorithm 1's migration
         selection, advance a staged drain, and (optionally) reschedule
         the instance."""
+        if self.recovery is not None:
+            # capture here: both ITER and COMMIT reach this point with
+            # the executor pipeline flushed, so exported KV is coherent
+            self.recovery.on_commit(self, inst, end)
         for req in prefill_done:
             target, needs_transfer = self.policy.on_prefill_done(
                 req, inst, end)
@@ -653,6 +724,9 @@ class Cluster:
                 self._handle(now, ITER, inst.iid)
         for req, t in res.token_events:
             inst.token_sink(req, t)
+        if self.recovery is not None:
+            for req in res.finished:
+                self.recovery.drop(req.rid)
         if self.on_finish is not None:
             for req in res.finished:
                 self.on_finish(req, req.finish_time

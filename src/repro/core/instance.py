@@ -197,6 +197,12 @@ class Instance:
         # multi-tier KV accounting
         self.spill_promoted_tokens: int = 0    # host tier -> HBM prefetches
         self.replicas_in: int = 0              # blocks landed by replication
+        # warm recovery: victims resumed from a checkpoint here, stream
+        # tokens they did NOT re-prefill, and planned-warm restores that
+        # had to fall back to cold recompute on this executor
+        self.warm_restores: int = 0
+        self.warm_restored_tokens: int = 0
+        self.warm_fallbacks: int = 0
 
     # ------------------------------------------------------------------
     # admission / queues
@@ -372,7 +378,7 @@ class Instance:
         while budget > 0 and self.prefill_queue:
             head = self.prefill_queue[0]
             if not self.allocator.holds(head.rid):
-                if not self._admit_prefill(head):
+                if not self._admit_prefill(head, now):
                     break                          # head-of-line blocking
             take = min(head.prefill_remaining, budget)
             items.append((head, take))
@@ -410,12 +416,15 @@ class Instance:
                 self.horizon_hist.get(plan.horizon, 0) + 1
         return plan
 
-    def _admit_prefill(self, req: Request) -> bool:
+    def _admit_prefill(self, req: Request,
+                       now: Optional[float] = None) -> bool:
         """Reserve HBM blocks for a queued prefill and hand the request
         to the executor.  With a prefix cache, the matched prefix is
         claimed (executor may shrink it to what its rows still hold) and
         the request's prefill starts at the matched position — the cost
         model then charges only the uncached tokens."""
+        if req.restore_state is not None:
+            return self._admit_restore(req, now)
         need = req.prefill_remaining + 64          # headroom for growth
         if self.prefix_cache is None:
             if not self.allocator.can_allocate(need):
@@ -454,6 +463,64 @@ class Instance:
             req.cached_prefix_len = hit
         self.executor.add_request(req)
         return True
+
+    def _admit_restore(self, req: Request,
+                       now: Optional[float] = None) -> bool:
+        """Land a warm-recovery restore: resume the victim from its
+        checkpointed stream position instead of re-prefilling its whole
+        context from token 0.  A bookkeeping-only executor (the sim's
+        token oracle) restores from the progress record alone; a live
+        executor adopts the materialized engine state via the ordinary
+        migration landing (``insert_state``) — without one it MUST fall
+        back to cold recompute, since resuming bookkeeping past KV that
+        does not exist would decode garbage.  Returns False only on
+        memory pressure (head-of-line retry, nothing consumed)."""
+        rs = req.restore_state
+        engine = rs.get("engine")
+        bookkeeping = getattr(self.executor, "bookkeeping_only", False)
+        if not bookkeeping and (
+                engine is None or engine.get("block_size")
+                != getattr(self.executor, "cache_block_size", None)):
+            return self._restore_cold(req, now)
+        ctx = rs["pos"] if bookkeeping else engine["pos"]
+        req.recompute_offset = req.output_len
+        req.prefill_pos = ctx - req.output_len
+        # final footprint matches the cold path exactly: the full
+        # recompute stream (prompt + emitted output) plus growth headroom
+        total = req.context_len + req.prefill_remaining + 64
+        if not self.allocator.can_allocate(total):
+            return False
+        if bookkeeping:
+            self.allocator.allocate(req.rid, total)
+        else:
+            from repro.engine.engine import MigrationFormatError
+            try:
+                # the can_allocate(total) pre-check above guarantees the
+                # landing never defers (total >= the state's pos+headroom)
+                self.executor.insert_state(req, engine)
+            except MigrationFormatError:
+                return self._restore_cold(req, now)
+            self.allocator.extend(req.rid, total)
+        self.executor.add_request(req)
+        req.restore_state = None
+        self.warm_restores += 1
+        self.warm_restored_tokens += ctx
+        if self.tracer is not None and now is not None:
+            self.tracer.event(req.rid, now, "warm_restore", iid=self.iid,
+                              pos=ctx, materialized=engine is not None)
+        return True
+
+    def _restore_cold(self, req: Request,
+                      now: Optional[float] = None) -> bool:
+        """This executor cannot host the restore plan: drop it and take
+        the ordinary cold recompute-from-0 admission path."""
+        req.restore_state = None
+        req.recompute_offset = req.output_len
+        req.prefill_pos = -req.output_len
+        self.warm_fallbacks += 1
+        if self.tracer is not None and now is not None:
+            self.tracer.event(req.rid, now, "warm_fallback", iid=self.iid)
+        return self._admit_prefill(req, now)
 
     def _preempt(self, req: Request, now: Optional[float] = None):
         self.decoding.pop(req.rid, None)

@@ -1189,6 +1189,27 @@ class JaxExecutor:
         # adoptable on this instance
         self._register_donor(req, slot)
 
+    def export_request_blocks(self, req: Request, indices):
+        """Host copies of the blocks at the given indices of ``req``'s
+        owned block run (warm-recovery checkpoint materialization).
+        Side-effect free — no refcounts, no LRU touches, no slot state;
+        each payload carries its quantization format so the restore
+        path can refuse a mismatched destination pool.  None when this
+        executor cannot export (dense path, request not held, or an
+        async step still in flight — mid-flight tensors are torn)."""
+        if not self.paged or not self.kv.allocator.holds(req.rid):
+            return None
+        if self._pending is not None and not self._pending.resolved:
+            return None
+        bids = self.kv.allocator.owned(req.rid)
+        fmt = self.kv_quant or "fp"
+        out = {}
+        for i in indices:
+            if 0 <= i < len(bids):
+                out[i] = {"fmt": fmt, "kv": jax.tree.map(
+                    np.asarray, self.kv.extract_blocks([bids[i]]))}
+        return out
+
     # ------------------------------------------------------------------
     # hot-prefix replication (block-granular, no request attached)
     # ------------------------------------------------------------------
@@ -1253,6 +1274,12 @@ class SimExecutor:
     #: the simulator models the paper system, where migrations ship only
     #: the non-shared suffix when the destination caches the prefix
     prefix_aware_transfer = True
+
+    #: no tensors exist: a warm restore needs only the allocator/slot
+    #: bookkeeping (the Instance may resume a request at a checkpointed
+    #: position without landing KV — on a real engine that would decode
+    #: garbage, so the restore path gates on this attribute)
+    bookkeeping_only = True
 
     def execute(self, plan) -> Dict[int, bool]:
         return {}

@@ -92,6 +92,11 @@ class Request:
     # quarantined instance (or lost a transfer) and re-prefilled; bounded
     # by FaultToleranceConfig.max_recoveries
     n_recoveries: int = 0
+    # warm recovery: a restore plan from the RecoveryManager's latest
+    # checkpoint ({"pos": stream position, "engine": optional
+    # migration-format state}).  Consumed (and cleared) by the admitting
+    # instance; None = ordinary cold recompute-from-0 path.
+    restore_state: Optional[dict] = None
 
     # ----------------------------------------------------------------
     @property

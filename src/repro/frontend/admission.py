@@ -32,6 +32,7 @@ depth gauges per class.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -52,6 +53,12 @@ class AdmissionConfig:
         default_factory=lambda: dict(PRIORITY_CLASSES))
     default_class: str = "standard"
     shed_fraction: float = 0.5    # controller actuator: share shed/epoch
+    # per-class token-rate limits: class -> tokens (prompt +
+    # max_new_tokens, charged at release) per ``budget_window`` seconds.
+    # Classes absent from the map are unlimited; None disables the
+    # mechanism entirely (bit-identical to the pre-budget queue).
+    token_budgets: Optional[Dict[str, float]] = None
+    budget_window: float = 1.0
 
 
 @dataclasses.dataclass
@@ -78,6 +85,14 @@ class AdmissionQueue:
             {c: 0 for c in self.cfg.classes}
         self.displaced = 0
         self.shed_count = 0
+        # token-rate limiting: tumbling window of tokens charged per
+        # class (charged at release — the moment load hits the cluster)
+        self._budget_window_start = 0.0
+        self._window_tokens: Dict[str, float] = \
+            {c: 0.0 for c in self.cfg.classes}
+        self.budget_deferrals = 0     # pops refused by budget gating
+        # drain-rate estimate for Retry-After: recent release timestamps
+        self._release_times: deque = deque(maxlen=32)
 
     # ------------------------------------------------------------------
     def resolve_class(self, name: Optional[str]) -> str:
@@ -123,12 +138,34 @@ class AdmissionQueue:
         return worst
 
     # ------------------------------------------------------------------
-    def pop(self) -> Optional[Entry]:
+    def _roll_budget_window(self, now: float):
+        if now - self._budget_window_start >= self.cfg.budget_window:
+            self._budget_window_start = now
+            for c in self._window_tokens:
+                self._window_tokens[c] = 0.0
+
+    def _under_budget(self, cls: str) -> bool:
+        budgets = self.cfg.token_budgets
+        if budgets is None or cls not in budgets:
+            return True
+        return self._window_tokens[cls] < budgets[cls]
+
+    def pop(self, now: Optional[float] = None) -> Optional[Entry]:
         """Strict priority between ranks; weighted stride fairness
-        within a rank; FIFO within a class."""
+        within a rank; FIFO within a class.  With ``token_budgets``
+        configured, classes over their window budget are skipped; None
+        with a non-empty queue means nothing is releasable this tick
+        (callers must stop draining, not spin)."""
         live = [c for c, d in self._q.items() if d]
         if not live:
             return None
+        if self.cfg.token_budgets is not None and now is not None:
+            self._roll_budget_window(now)
+            eligible = [c for c in live if self._under_budget(c)]
+            if not eligible:
+                self.budget_deferrals += 1
+                return None
+            live = eligible
         top = min(self._rank(c) for c in live)
         cands = [c for c in live if self._rank(c) == top]
         cls = min(cands, key=lambda c: (self._pass[c], c))
@@ -141,7 +178,16 @@ class AdmissionQueue:
                 self._pass[c] = floor
         self.released += 1
         self.released_by_class[cls] += 1
-        return self._q[cls].popleft()
+        entry = self._q[cls].popleft()
+        # charge the request's worst-case token footprint against the
+        # class window (output length is unknown a priori, so the cap
+        # is the honest ceiling)
+        self._window_tokens[cls] += (
+            getattr(entry.req, "prompt_len", 0)
+            + getattr(entry.req, "max_new_tokens", 0))
+        if now is not None:
+            self._release_times.append(now)
+        return entry
 
     # ------------------------------------------------------------------
     def shed(self, fraction: Optional[float] = None,
@@ -176,10 +222,17 @@ class AdmissionQueue:
                     return e
         return None
 
-    def retry_after_hint(self) -> int:
-        """Whole seconds a refused client should wait before retrying,
-        scaled by how many release cycles the current backlog represents
-        (depth / max_inflight), clamped to [1, 60]."""
+    def retry_after_hint(self, now: Optional[float] = None) -> int:
+        """Whole seconds a refused client should wait before retrying.
+        With enough release history the hint is backlog / observed
+        drain rate (how long the current queue actually takes to empty
+        at the measured pace); otherwise it falls back to release-cycle
+        counting (depth / max_inflight).  Clamped to [1, 60]."""
+        if len(self._release_times) >= 2:
+            span = self._release_times[-1] - self._release_times[0]
+            if span > 0.0:
+                rate = (len(self._release_times) - 1) / span
+                return int(max(1, min(60, math.ceil(len(self) / rate))))
         cycles = len(self) / max(1, self.cfg.max_inflight)
         return int(max(1, min(60, 1 + cycles)))
 
@@ -194,7 +247,7 @@ class AdmissionQueue:
 
     # ------------------------------------------------------------------
     def gauges(self, now: float) -> dict:
-        return {
+        out = {
             "depth": len(self),
             "depth_by_class": self.depth_by_class(),
             "oldest_wait_s": round(self.oldest_wait(now), 4),
@@ -204,3 +257,8 @@ class AdmissionQueue:
             "displaced_total": self.displaced,
             "shed_total": self.shed_count,
         }
+        if self.cfg.token_budgets is not None:
+            out["budget_deferrals_total"] = self.budget_deferrals
+            out["window_tokens_by_class"] = {
+                c: self._window_tokens[c] for c in self.cfg.token_budgets}
+        return out

@@ -13,6 +13,8 @@ _EXPORTS = {
     "Fault": "repro.serving.faults",
     "FaultInjector": "repro.serving.faults",
     "MetricsLog": "repro.serving.metrics",
+    "RecoveryConfig": "repro.serving.recovery",
+    "RecoveryManager": "repro.serving.recovery",
     "TelemetryWindow": "repro.serving.metrics",
     "AbortMsg": "repro.serving.server",
     "RequestHandle": "repro.serving.server",

@@ -301,6 +301,7 @@ class SliderController:
                  and i.schedulable]
         if len(insts) < 2:
             return
+        rec = getattr(cluster, "recovery", None)
         for src in insts:
             budget = cfg.replicate_max_blocks
             for tokens, hits in src.hot_prefixes(cfg.replicate_max_paths,
@@ -309,6 +310,15 @@ class SliderController:
                     break
                 bs = src.prefix_cache.block_size
                 n = len(tokens) // bs
+                if rec is not None:
+                    # warm recovery already re-replicated this path after
+                    # a crash: spend the epoch budget elsewhere while two
+                    # healthy holders survive
+                    live = [iid for iid in rec.holders(tokens)
+                            if (cluster._inst_by_id.get(iid) is not None
+                                and cluster._inst_by_id[iid].schedulable)]
+                    if len(live) >= 2:
+                        continue
 
                 def depth(inst):
                     return len(inst.prefix_cache.tree.match(

@@ -83,6 +83,9 @@ class FaultInjector:
         self.transfer_drop_p = transfer_drop_p
         self.transfer_corrupt_p = transfer_corrupt_p
         self._rng = random.Random(seed)
+        # separate stream for retry-backoff jitter so adding jitter
+        # never perturbs the transfer_outcome() sequence for a seed
+        self._jitter_rng = random.Random(seed ^ 0x5EED)
         # counters (observability; the cluster keeps its own too)
         self.fired = {k: 0 for k in _INSTANCE_KINDS}
         self.transfer_drops = 0
@@ -135,6 +138,14 @@ class FaultInjector:
             self.transfer_corruptions += 1
             return CORRUPT
         return DELIVER
+
+    def retry_jitter(self, base: float, prev: float, cap: float) -> float:
+        """Decorrelated-jitter backoff delay: uniform in
+        ``[base, 3 * prev]``, capped.  Transfers that failed together
+        (e.g. all landings during a stall) fan out instead of retrying
+        in lockstep the way a capped pure exponential would."""
+        return min(cap, self._jitter_rng.uniform(
+            base, max(base, prev) * 3.0))
 
     def arm_exec_error(self, instance) -> None:
         """One-shot: the instance's next ``step_async``/``execute``

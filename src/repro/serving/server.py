@@ -289,7 +289,11 @@ class ServingLoop:
             return
         now = self.cluster.now
         while len(q) and self._inflight < q.cfg.max_inflight:
-            entry = q.pop()
+            entry = q.pop(now)
+            if entry is None:
+                # every queued class is over its token budget for the
+                # current window — nothing releasable this tick
+                break
             self._inflight += 1
             self._released.add(entry.req.rid)
             self.telemetry.on_queue_wait(
@@ -725,6 +729,8 @@ class ServingLoop:
         fc = self.cluster.fault_counters()
         if any(fc.values()):
             snap["faults"] = fc
+        if getattr(self.cluster, "recovery", None) is not None:
+            snap["recovery"] = self.cluster.recovery_counters()
         return snap
 
     # ------------------------------------------------------------------

@@ -270,6 +270,7 @@ class Tracer:
         ttft_acc: Dict[str, float] = {}
         tpot_acc: Dict[str, float] = {}
         n_fin = n_ttft = n_tpot = 0
+        n_ttft_rec = n_tpot_rec = 0
         ttft_excess = 0.0
         for tr in self._done.values():
             if tr.state != "finished" or tr.first_token_t is None:
@@ -278,6 +279,7 @@ class Tracer:
             ttft = tr.first_token_t - tr.t_begin
             if ttft > slo.ttft:
                 n_ttft += 1
+                n_ttft_rec += tr.n_recoveries > 0
                 ttft_excess += ttft - slo.ttft
                 for ph, s in self._clipped(
                         tr, tr.t_begin, tr.first_token_t).items():
@@ -286,6 +288,7 @@ class Tracer:
                 tpot = (tr.t_end - tr.first_token_t) / (tr.output_len - 1)
                 if tpot > slo.tpot:
                     n_tpot += 1
+                    n_tpot_rec += tr.n_recoveries > 0
                     for ph, s in self._clipped(
                             tr, tr.first_token_t, tr.t_end).items():
                         tpot_acc[ph] = tpot_acc.get(ph, 0.0) + s
@@ -300,10 +303,15 @@ class Tracer:
                      "budget_s": slo.ttft,
                      "mean_excess_s": round(ttft_excess / n_ttft, 6)
                      if n_ttft else 0.0,
-                     "mean_phase_s": mean(ttft_acc, n_ttft)},
+                     "mean_phase_s": mean(ttft_acc, n_ttft),
+                     # violators that went through a crash recovery —
+                     # separates recovery-dominated violations from
+                     # ordinary congestion
+                     "recovered_violators": n_ttft_rec},
             "tpot": {"violations": n_tpot,
                      "budget_s": slo.tpot,
-                     "mean_phase_s": mean(tpot_acc, n_tpot)},
+                     "mean_phase_s": mean(tpot_acc, n_tpot),
+                     "recovered_violators": n_tpot_rec},
         }
 
     # ------------------------------------------------------------------

@@ -35,7 +35,8 @@ def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
                   executor_factory: Optional[Callable] = None,
                   taichi_flags: Optional[dict] = None,
                   async_exec: bool = False,
-                  ft: Optional[FaultToleranceConfig] = None) -> Cluster:
+                  ft: Optional[FaultToleranceConfig] = None,
+                  recovery=None) -> Cluster:
     cfg = get_config(sc.model)
     cost = CostModel(cfg, InstanceSpec(tp=sc.tp))
     factory = executor_factory or (lambda: SimExecutor())
@@ -65,7 +66,8 @@ def build_cluster(sc: ServingConfig, slo: SLO, seed: int = 0,
                               sliders=s, seed=seed, **(taichi_flags or {}))
     else:
         raise ValueError(sc.policy)
-    return Cluster(policy, cost, async_exec=async_exec, ft=ft)
+    return Cluster(policy, cost, async_exec=async_exec, ft=ft,
+                   recovery=recovery)
 
 
 def run_sim(sc: ServingConfig, slo: SLO, workload: WorkloadSpec,

@@ -18,6 +18,7 @@ from repro.engine.request import Request, State, TERMINAL_STATES
 from repro.serving import ServingLoop, WatchdogConfig
 from repro.serving.faults import (CRASH, EXEC_ERROR, RECOVER, STALL,
                                   Fault, FaultInjector, payload_checksum)
+from repro.serving.recovery import RecoveryConfig
 from repro.sim.simulator import ServingConfig, build_cluster
 from repro.sim.workload import SHAREGPT
 
@@ -26,9 +27,11 @@ LOOSE = SLO(ttft=10.0, tpot=1.0)
 
 
 def _mk_loop(policy="taichi", sliders=Sliders(2, 2, 1024, 256),
-             blocks=4096, slo=LOOSE, ft=None, async_exec=False, **kw):
+             blocks=4096, slo=LOOSE, ft=None, async_exec=False,
+             recovery=None, **kw):
     sc = ServingConfig(policy=policy, sliders=sliders, hbm_blocks=blocks)
-    cluster = build_cluster(sc, slo, ft=ft, async_exec=async_exec)
+    cluster = build_cluster(sc, slo, ft=ft, async_exec=async_exec,
+                            recovery=recovery)
     return ServingLoop(cluster, slo, **kw)
 
 
@@ -434,3 +437,207 @@ def test_chaos_no_request_lost_and_token_exact(seed):
     fc = loop.cluster.fault_counters()
     assert fc["failed"] == loop.failed_count
     assert fc["aborted"] == loop.aborted_count
+
+
+# ---------------------------------------------------------------------------
+# warm recovery: checkpoints, restore, bit-identical when off
+# ---------------------------------------------------------------------------
+
+def test_recovery_disabled_config_is_inert():
+    reqs_a = SHAREGPT.sample_requests(60, 40.0, seed=5)
+    reqs_b = SHAREGPT.sample_requests(60, 40.0, seed=5)
+    plain = _mk_loop(arrivals=iter(reqs_a), steal=False)
+    plain.run()
+    # enable=False must leave Cluster.recovery None: bit-identical run
+    armed = _mk_loop(arrivals=iter(reqs_b), steal=False,
+                     recovery=RecoveryConfig(enable=False))
+    assert armed.cluster.recovery is None
+    armed.run()
+    assert [r.finish_time for r in reqs_b] == \
+        [r.finish_time for r in reqs_a]
+    assert [r.output_len for r in reqs_b] == \
+        [r.output_len for r in reqs_a]
+    assert "recovery" not in armed.snapshot()
+
+
+def test_recovery_on_without_faults_changes_nothing():
+    """Checkpointing is pure observation: with no crash there is never
+    a restore, and the served schedule matches a recovery-less run."""
+    reqs_a = SHAREGPT.sample_requests(60, 40.0, seed=5)
+    reqs_b = SHAREGPT.sample_requests(60, 40.0, seed=5)
+    plain = _mk_loop(arrivals=iter(reqs_a), steal=False)
+    plain.run()
+    warm = _mk_loop(arrivals=iter(reqs_b), steal=False,
+                    recovery=RecoveryConfig(enable=True))
+    warm.run()
+    assert [r.finish_time for r in reqs_b] == \
+        [r.finish_time for r in reqs_a]
+    assert [r.output_len for r in reqs_b] == \
+        [r.output_len for r in reqs_a]
+    rc = warm.snapshot()["recovery"]
+    assert rc["checkpoints"] > 0
+    assert rc["warm_restores"] == 0
+
+
+def test_warm_restore_resumes_from_checkpoint():
+    reqs = SHAREGPT.sample_requests(80, 60.0, seed=12)
+    oracle = SHAREGPT.sample_requests(80, 60.0, seed=12)
+    base = _mk_loop(arrivals=iter(oracle), steal=False)
+    base.run()
+    want = {r.rid - oracle[0].rid: r.output_len for r in oracle}
+
+    # instance 2 is a decode-role instance under Sliders(2, 2, ...) —
+    # crashing it catches mid-decode victims with checkpointed progress
+    inj = FaultInjector([Fault(0.5, CRASH, 2), Fault(1.2, RECOVER, 2)])
+    loop = _mk_loop(arrivals=iter(reqs), steal=False, faults=inj,
+                    recovery=RecoveryConfig(enable=True,
+                                            checkpoint_tokens=8))
+    # count streamed tokens per request at the sink: a warm restore must
+    # never re-emit a token index that already streamed (no double
+    # emission across the restore)
+    emitted = {}
+    orig_sinks = {i.iid: i.token_sink for i in loop.cluster.instances}
+
+    def counting(iid):
+        def sink(req, t):
+            emitted[req.rid] = emitted.get(req.rid, 0) + 1
+            orig_sinks[iid](req, t)
+        return sink
+    for i in loop.cluster.instances:
+        i.token_sink = counting(i.iid)
+    loop.run()
+
+    _assert_all_terminal(loop)
+    first = reqs[0].rid
+    for r in loop.requests:
+        assert r.state == State.FINISHED
+        assert r.output_len == want[r.rid - first]
+        # every emission was a fresh token index
+        assert emitted.get(r.rid, 0) == r.output_len
+    rc = loop.cluster.recovery_counters()
+    assert rc["warm_restores"] > 0, "crash victims never resumed warm"
+    assert rc["warm_restored_tokens"] > 0
+    assert rc["checkpoints"] > 0
+    snap = loop.snapshot()
+    assert snap["recovery"]["warm_restores"] == rc["warm_restores"]
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_warm_chaos_no_request_lost_and_token_exact(seed):
+    """The chaos property machine with warm recovery enabled: same
+    invariants as the cold-path chaos test — conservation, terminal
+    resolution, greedy token-exactness — plus no double emission."""
+    n, qps = 70, 50.0
+    oracle = SHAREGPT.sample_requests(n, qps, seed=200 + seed)
+    base = _mk_loop(arrivals=iter(oracle), steal=False)
+    base.run()
+    want = {r.rid - oracle[0].rid: r.output_len for r in oracle}
+
+    reqs = SHAREGPT.sample_requests(n, qps, seed=200 + seed)
+    t_end = max(r.arrival for r in reqs)
+    inj = FaultInjector.random_schedule(
+        seed, [0, 1, 2, 3], t_end=t_end, n_crashes=2, n_stalls=2,
+        n_exec_errors=1, stall_duration=0.5, recover_after=0.8,
+        transfer_drop_p=0.05, transfer_corrupt_p=0.02)
+    rng = random.Random(seed)
+    loop = _mk_loop(arrivals=iter(reqs), steal=False, faults=inj,
+                    recovery=RecoveryConfig(enable=True,
+                                            checkpoint_tokens=8),
+                    watchdog=WatchdogConfig(heartbeat_timeout=0.4,
+                                            probation=0.5,
+                                            check_every=0.05))
+    emitted = {}
+    orig_sinks = {i.iid: i.token_sink for i in loop.cluster.instances}
+
+    def counting(iid):
+        def sink(req, t):
+            emitted[req.rid] = emitted.get(req.rid, 0) + 1
+            orig_sinks[iid](req, t)
+        return sink
+    for i in loop.cluster.instances:
+        i.token_sink = counting(i.iid)
+    loop.run(until=t_end * 0.5)
+    live = [r for r in loop.requests if r.state not in TERMINAL_STATES]
+    for r in rng.sample(live, min(3, len(live))):
+        loop.abort(r.rid)
+    loop.run()
+
+    _assert_all_terminal(loop)
+    first = reqs[0].rid
+    for r in loop.requests:
+        if r.state == State.FINISHED:
+            assert r.output_len == want[r.rid - first], \
+                f"request {r.rid} lost or duplicated tokens"
+            assert emitted.get(r.rid, 0) == r.output_len, \
+                f"request {r.rid} double-emitted across a restore"
+    assert sum(inj.fired.values()) >= 1
+    rc = loop.cluster.recovery_counters()
+    # checkpoints always flow; a restore only if a crash caught victims
+    assert rc["checkpoints"] > 0
+    fc = loop.cluster.fault_counters()
+    assert fc["failed"] == loop.failed_count
+    assert fc["aborted"] == loop.aborted_count
+
+
+# ---------------------------------------------------------------------------
+# post-crash KV re-replication
+# ---------------------------------------------------------------------------
+
+def test_crash_rereplicates_hot_prefix_immediately():
+    """When a hot-prefix replica holder dies, the manager re-establishes
+    the path on the coldest healthy peer at fail time instead of waiting
+    for the controller's next replication epoch."""
+    from repro.serving import ControllerConfig, SliderController
+    sc = ServingConfig(policy="taichi", sliders=Sliders(2, 1, 512, 256),
+                       hbm_blocks=1024, block_size=16, prefix_cache=True)
+    cluster = build_cluster(sc, LOOSE,
+                            recovery=RecoveryConfig(enable=True))
+    ctl = SliderController(ControllerConfig(
+        replicate=True, replicate_min_hits=2, replicate_max_paths=2,
+        replicate_max_blocks=64))
+    loop = ServingLoop(cluster, LOOSE, controller=ctl)
+    base = list(range(1, 257))                     # 16 hot blocks
+    for i in range(14):
+        tail = list(range(10_000 + 97 * i, 10_000 + 97 * i + 64))
+        loop.submit(Request(prompt_len=len(base) + 64, max_new_tokens=4,
+                            hidden_output_len=4,
+                            prompt_tokens=base + tail,
+                            arrival=0.5 * i))
+    loop.run()
+    assert ctl.replications > 0, "no replica to lose — test is vacuous"
+    rec = cluster.recovery
+    key, holders = next(iter(rec._replicas.items()))
+    victim = cluster._inst_by_id[next(iter(holders))]
+    before = rec.rereplications
+    cluster.fail_instance(victim)
+    assert rec.rereplications > before, \
+        "crash of a replica holder never re-replicated its path"
+    loop.run()                                     # land the transfer
+    survivors = [i for i in cluster.instances
+                 if i is not victim
+                 and i.prefix_cache.match_tokens(list(key) + [0]) > 0]
+    assert survivors, "re-replicated path landed nowhere healthy"
+    _assert_conserved(cluster)
+
+
+# ---------------------------------------------------------------------------
+# retry-backoff jitter
+# ---------------------------------------------------------------------------
+
+def test_retry_jitter_seeded_and_bounded():
+    a = FaultInjector(seed=3)
+    b = FaultInjector(seed=3)
+    seq_a = [a.retry_jitter(0.05, prev, 0.8)
+             for prev in (0.05, 0.1, 0.4, 2.0)]
+    seq_b = [b.retry_jitter(0.05, prev, 0.8)
+             for prev in (0.05, 0.1, 0.4, 2.0)]
+    assert seq_a == seq_b                      # same seed, same delays
+    for d, prev in zip(seq_a, (0.05, 0.1, 0.4, 2.0)):
+        assert 0.05 <= d <= 0.8                # [base, cap] always
+        assert d <= max(0.05, prev) * 3.0
+    # the jitter stream is independent of transfer outcomes
+    c = FaultInjector(seed=3, transfer_drop_p=0.3)
+    outcomes = [c.transfer_outcome() for _ in range(16)]
+    c2 = FaultInjector(seed=3, transfer_drop_p=0.3)
+    c2.retry_jitter(0.05, 0.1, 0.8)            # consume jitter first
+    assert [c2.transfer_outcome() for _ in range(16)] == outcomes

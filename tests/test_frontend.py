@@ -218,7 +218,54 @@ def test_admission_drain_and_gauges():
     g = q.gauges(5.0)
     assert g["depth"] == 3 and g["oldest_wait_s"] == 5.0
     assert g["depth_by_class"]["standard"] == 3
+    assert "budget_deferrals_total" not in g   # budgets off: no gauges
     assert len(q.drain()) == 3 and len(q) == 0
+
+
+def test_admission_token_budget_gates_class():
+    # each request charges prompt(8) + max_new(4) = 12 tokens; a
+    # 10-token/s budget admits one per window (the gate checks before
+    # charging — one overshoot, then the class is ineligible)
+    q = AdmissionQueue(AdmissionConfig(
+        max_depth=16, token_budgets={"batch": 10.0}, budget_window=1.0))
+    for _ in range(3):
+        q.push(_req(), "batch", 0.0)
+    assert q.pop(0.0) is not None              # 12 charged (overshoot)
+    assert q.pop(0.1) is None                  # 12 >= 10: over budget
+    assert q.budget_deferrals == 1
+    assert len(q) == 2                         # deferred, not dropped
+    assert q.pop(1.0) is not None              # window rolled: admits
+    g = q.gauges(1.0)
+    assert g["budget_deferrals_total"] == 1
+    assert g["window_tokens_by_class"]["batch"] == 12.0  # fresh window
+
+
+def test_admission_budget_skips_to_unbudgeted_class():
+    # over-budget batch must not block standard (unlimited) — the gate
+    # restricts eligibility, it does not stall the whole queue
+    q = AdmissionQueue(AdmissionConfig(
+        max_depth=16, token_budgets={"batch": 1.0}, budget_window=1.0))
+    q.push(_req(), "batch", 0.0)
+    q.push(_req(), "batch", 0.0)
+    q.push(_req(), "standard", 0.0)
+    assert q.pop(0.0).cls == "standard"        # higher rank serves first
+    assert q.pop(0.0).cls == "batch"           # first charge always fits
+    assert q.pop(0.0) is None                  # batch over budget: deferred
+    # without a timestamp the gate is bypassed (legacy no-clock callers)
+    assert q.pop().cls == "batch"
+
+
+def test_admission_retry_after_tracks_drain_rate():
+    q = AdmissionQueue(AdmissionConfig(max_depth=64, max_inflight=4))
+    for i in range(20):
+        q.push(_req(), "standard", 0.0)
+    # no release history yet: falls back to cycle counting
+    assert q.retry_after_hint() == int(1 + 20 / 4)
+    # drain 10 at 2 per second -> observed rate 2/s, 10 left -> ~5 s
+    for i in range(10):
+        q.pop(i * 0.5)
+    assert q.retry_after_hint() == 5
+    assert 1 <= q.retry_after_hint(99.0) <= 60
 
 
 # ---------------------------------------------------------------------------
